@@ -1,0 +1,71 @@
+"""Shared helpers for the paper-reproduction benchmarks.
+
+All paper experiments run in float64 (the censoring test degenerates at the
+f32 numerical floor — see EXPERIMENTS.md) and report:
+  * communications / iterations to a target objective error (Tables I, II)
+  * objective-error trajectories vs comms and vs iterations (Figs. 2-12)
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+
+from repro.core import baselines, simulator
+from repro.core.simulator import (FedTask, comms_to_accuracy, estimate_fstar,
+                                  iterations_to_accuracy, run)
+
+ALGOS = ["chb", "hb", "lag", "gd"]
+
+
+def compare_algorithms(bundle, num_iters: int, tol: float,
+                       alpha: float | None = None, beta: float = 0.4,
+                       eps1_scale: float = 0.1, fstar_iters: int = 40000):
+    """Run all four algorithms; return {algo: dict} with comm/iter stats."""
+    alpha = alpha if alpha is not None else bundle.alpha_paper
+    m = bundle.L_m.shape[0]
+    fstar = float(estimate_fstar(bundle.task, alpha, fstar_iters))
+    out = {"fstar": fstar}
+    for name in ALGOS:
+        kw = {}
+        if name in ("hb", "chb"):
+            kw["beta"] = beta
+        if name in ("lag", "chb"):
+            kw["eps1_scale"] = eps1_scale
+        cfg = baselines.ALGORITHMS[name](alpha, m, **kw)
+        t0 = time.time()
+        hist = run(cfg, bundle.task, num_iters)
+        dt = time.time() - t0
+        rec = {
+            "iters_to_tol": iterations_to_accuracy(hist, fstar, tol),
+            "comms_to_tol": comms_to_accuracy(hist, fstar, tol),
+            "total_comms": int(hist.comm_cum[-1]),
+            "final_err": float(hist.objective[-1] - fstar),
+            "final_gradsq": float(hist.agg_grad_sqnorm[-1]),
+            "us_per_iter": dt / num_iters * 1e6,
+            "objective": np.asarray(hist.objective) - fstar,
+            "comm_cum": np.asarray(hist.comm_cum),
+            "mask": np.asarray(hist.mask),
+        }
+        out[name] = rec
+    return out
+
+
+def print_table(title: str, results: dict, metric_keys=("comms_to_tol",
+                                                        "iters_to_tol")):
+    print(f"\n== {title} ==")
+    hdr = "algo".ljust(6) + "".join(k.rjust(16) for k in metric_keys)
+    print(hdr)
+    for a in ALGOS:
+        row = a.ljust(6) + "".join(
+            str(results[a][k]).rjust(16) for k in metric_keys)
+        print(row)
+
+
+def csv_row(name: str, results: dict, derived: str) -> str:
+    us = results["chb"]["us_per_iter"]
+    return f"{name},{us:.1f},{derived}"

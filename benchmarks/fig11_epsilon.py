@@ -1,0 +1,40 @@
+"""Fig. 11: eps1 sweep — the communication/iteration trade-off knob.
+
+Run on the Fig.-2 linear-regression setting (heterogeneous L_m), where the
+paper's monotone trade-off is cleanly visible: larger eps1 -> fewer comms,
+more iterations. (On our ill-conditioned logistic stand-in the trade-off
+inverts — heavier censoring lengthens the large-||dtheta|| transient so the
+total comms at tolerance RISES with eps1; recorded in EXPERIMENTS.md §Repro
+as a deviation of the stand-in, not of the algorithm.)
+"""
+from repro.core import chb as chb_mod, simulator
+from repro.core.censoring import paper_eps1
+from repro.data import paper_tasks
+
+
+def main() -> str:
+    b = paper_tasks.make_linear_regression()   # Fig. 2 setting
+    alpha = b.alpha_paper
+    fstar = float(simulator.estimate_fstar(b.task, alpha, 40000))
+    print("\n== Fig. 11: eps1 sweep (linreg synthetic, tol 1e-7) ==")
+    rows = []
+    for scale in [0.01, 0.1, 1.0]:
+        cfg = chb_mod.FedOptConfig(alpha=alpha, beta=0.4,
+                                   eps1=paper_eps1(alpha, 9, scale),
+                                   num_workers=9)
+        hist = simulator.run(cfg, b.task, 3000)
+        k = simulator.iterations_to_accuracy(hist, fstar, 1e-7)
+        c = simulator.comms_to_accuracy(hist, fstar, 1e-7)
+        print(f"eps1_scale={scale:5.2f} iters={k:6d} comms={c}")
+        rows.append((scale, k, c))
+    comms = [r[2] for r in rows]
+    iters = [r[1] for r in rows]
+    # the paper's trade-off: comms monotone down, iterations monotone up
+    assert comms == sorted(comms, reverse=True), comms
+    assert iters == sorted(iters), iters
+    derived = ";".join(f"e{r[0]}:c={r[2]},k={r[1]}" for r in rows)
+    return f"fig11_epsilon,0,{derived}"
+
+
+if __name__ == "__main__":
+    print(main())

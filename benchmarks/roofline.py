@@ -1,0 +1,141 @@
+"""Roofline analysis (deliverable g): post-process the dry-run sweep JSONs
+into the three-term table. See EXPERIMENTS.md §Roofline.
+
+  compute    = FLOPs_device / peak          (197 TFLOP/s bf16 per chip)
+  memory     = HBM_bytes_device / bw        (819 GB/s)
+  collective = coll_bytes_device / link_bw  (~50 GB/s/link ICI)
+
+FLOPs / bytes are the loop-aware per-device totals from
+repro.launch.hlo_analysis (XLA's cost_analysis counts while bodies once —
+see that module's docstring).
+"""
+import glob
+import json
+import math
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+MODEL_PARAMS = {}
+
+
+def _model_flops(arch: str, shape: str) -> float:
+    """6*N(active)*tokens for train, 2*N*tokens for inference."""
+    from repro.configs import ARCHS
+    from repro.launch.specs import INPUT_SHAPES
+    from repro.models.model import active_param_count
+    cfg = ARCHS[arch]
+    if arch not in MODEL_PARAMS:
+        MODEL_PARAMS[arch] = active_param_count(cfg)
+    n = MODEL_PARAMS[arch]
+    info = INPUT_SHAPES[shape]
+    if info["kind"] == "train":
+        toks = info["global_batch"] * info["seq_len"]
+        return 6.0 * n * toks
+    if info["kind"] == "prefill":
+        toks = info["global_batch"] * info["seq_len"]
+        return 2.0 * n * toks
+    return 2.0 * n * info["global_batch"]          # decode: 1 token/seq
+
+
+def load_records(result_dir: str) -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(result_dir, "*.json"))):
+        with open(f) as fh:
+            data = json.load(fh)
+        recs.extend(data if isinstance(data, list) else [data])
+    return recs
+
+
+def roofline_table(result_dir: str, chips: int = 256) -> list[dict]:
+    rows = []
+    for r in load_records(result_dir):
+        if not r.get("ok"):
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "ok": False, "error": r.get("error", "?")})
+            continue
+        comp = r["flops"] / PEAK_FLOPS           # per-device seconds
+        mem = r["hbm_bytes"] / HBM_BW
+        coll = r["collective_bytes"] / LINK_BW
+        dom = max(("compute", comp), ("memory", mem),
+                  ("collective", coll), key=lambda kv: kv[1])
+        mf = _model_flops(r["arch"], r["shape"])
+        useful = mf / (r["flops"] * chips) if r["flops"] else 0.0
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "ok": True,
+            "compute_s": comp, "memory_s": mem, "collective_s": coll,
+            "bottleneck": dom[0],
+            "model_flops": mf, "hlo_flops_total": r["flops"] * chips,
+            "useful_ratio": useful,
+            "temp_gib": r["memory"]["temp_bytes"] / 2**30,
+            "arg_gib": r["memory"]["argument_bytes"] / 2**30,
+        })
+    return rows
+
+
+def main() -> str:
+    base = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "results")
+    n_ok = 0
+    total = 0
+    for mesh in ("pod1", "pod2"):
+        d = os.path.join(base, f"dryrun_{mesh}")
+        if not os.path.isdir(d):
+            continue
+        rows = roofline_table(d)
+        print(f"\n== Roofline ({mesh}) ==")
+        print(f"{'arch':24s} {'shape':12s} {'comp_s':>9s} {'mem_s':>9s} "
+              f"{'coll_s':>9s} {'bound':>10s} {'useful':>7s}")
+        for r in rows:
+            total += 1
+            if not r["ok"]:
+                print(f"{r['arch']:24s} {r['shape']:12s} FAILED: "
+                      f"{r['error'][:50]}")
+                continue
+            n_ok += 1
+            print(f"{r['arch']:24s} {r['shape']:12s} "
+                  f"{r['compute_s']:9.4f} {r['memory_s']:9.4f} "
+                  f"{r['collective_s']:9.4f} {r['bottleneck']:>10s} "
+                  f"{r['useful_ratio']:7.3f}")
+    hillclimb_table(base)
+    return f"roofline,0,cases_ok={n_ok}/{total}"
+
+
+def hillclimb_table(base: str) -> None:
+    """§Perf comparison: hillclimb variants vs their single-pod baselines."""
+    d = os.path.join(base, "hillclimb")
+    if not os.path.isdir(d):
+        return
+    print("\n== §Perf hillclimb variants (vs single-pod baselines) ==")
+    print(f"{'variant':42s} {'comp_s':>8s} {'mem_s':>8s} {'coll_s':>9s} "
+          f"{'max-term':>9s}")
+    shown = set()
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        recs = json.load(open(f))
+        r = recs[0] if isinstance(recs, list) else recs
+        if not r.get("ok"):
+            print(f"{os.path.basename(f)[:-5]:42s} FAILED")
+            continue
+        key = (r["arch"], r["shape"])
+        if key not in shown:
+            shown.add(key)
+            bpath = os.path.join(base, "dryrun_pod1",
+                                 f"{r['arch']}_{r['shape']}.json")
+            if os.path.exists(bpath):
+                b = json.load(open(bpath))[0]
+                bc, bm, bl = (b["flops"] / PEAK_FLOPS,
+                              b["hbm_bytes"] / HBM_BW,
+                              b["collective_bytes"] / LINK_BW)
+                print(f"{(r['arch'][:24] + ' BASELINE'):42s} {bc:8.2f} "
+                      f"{bm:8.2f} {bl:9.2f} {max(bc, bm, bl):9.2f}")
+        c, m, l = (r["flops"] / PEAK_FLOPS, r["hbm_bytes"] / HBM_BW,
+                   r["collective_bytes"] / LINK_BW)
+        name = os.path.basename(f)[:-5]
+        print(f"{name[:42]:42s} {c:8.2f} {m:8.2f} {l:9.2f} "
+              f"{max(c, m, l):9.2f}")
+
+
+if __name__ == "__main__":
+    print(main())

@@ -1,0 +1,55 @@
+"""Benchmark driver: one function per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Prints a ``name,us_per_call,derived`` CSV line per benchmark at the end.
+"""
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import (fig1_worker_comms, fig2_linreg, fig3_logreg,
+                   fig10_stepsize, fig11_epsilon, fig12_descent,
+                   roofline, serving, table1_ijcnn, table2_small,
+                   table3_mnist)
+    benches = [
+        ("fig1_worker_comms", fig1_worker_comms.main),
+        ("fig2_linreg", fig2_linreg.main),
+        ("fig3_logreg", fig3_logreg.main),
+        ("table1_ijcnn", table1_ijcnn.main),
+        ("table2_small", table2_small.main),
+        ("table3_mnist", table3_mnist.main),
+        ("fig10_stepsize", fig10_stepsize.main),
+        ("fig11_epsilon", fig11_epsilon.main),
+        ("fig12_descent", fig12_descent.main),
+        ("serving", serving.main),
+        ("roofline", roofline.main),
+    ]
+    rows, failed = [], []
+    for name, fn in benches:
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        try:
+            rows.append(fn())
+            print(f"[{name}] done in {time.time()-t0:.1f}s")
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    print("\nname,us_per_call,derived")
+    for r in rows:
+        print(r)
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

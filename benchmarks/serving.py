@@ -1,0 +1,69 @@
+"""Serving micro-benchmark: prefill + per-token decode wall-clock on the
+REDUCED config of each family representative (CPU; real numbers come from
+the TPU dry-run terms — this validates the serving path end-to-end and
+gives the `us_per_call` figures for deliverable d)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get
+from repro.data.lm_data import MarkovLM
+from repro.models import model
+
+REPS = ["qwen3-4b", "mixtral-8x22b", "mamba2-780m", "jamba-1.5-large-398b"]
+
+
+def bench_arch(arch: str, batch=4, prompt=64, gen=8):
+    cfg = get(arch).reduced()
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    lm = MarkovLM(cfg.vocab_size, seed=0)
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(lm.sample(rng, batch, prompt)[:, :-1])
+    kwargs = {}
+    if cfg.frontend:
+        kwargs["enc_embeddings"] = jnp.asarray(
+            0.3 * rng.standard_normal((batch, cfg.num_frontend_tokens,
+                                       cfg.d_frontend)), cfg.jnp_dtype)
+    prefix = cfg.num_frontend_tokens if cfg.frontend == "audio" else 0
+    cache_len = prefix + prompt + gen + 1
+
+    pre = jax.jit(lambda p, t: model.prefill(p, cfg, t, cache_len=cache_len,
+                                             **kwargs))
+    step = jax.jit(lambda p, c, t, pos: model.serve_step(p, cfg, c, t, pos))
+    logits, cache = pre(params, prompts)            # compile
+    jax.block_until_ready(logits)
+    t0 = time.time()
+    logits, cache = pre(params, prompts)
+    jax.block_until_ready(logits)
+    prefill_s = time.time() - t0
+
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    logits2, cache = step(params, cache, tok, jnp.asarray(prefix + prompt))
+    jax.block_until_ready(logits2)                  # compile
+    t0 = time.time()
+    for i in range(gen):
+        logits2, cache = step(params, cache, tok,
+                              jnp.asarray(prefix + prompt + i))
+    jax.block_until_ready(logits2)
+    decode_us = (time.time() - t0) / gen * 1e6
+    return prefill_s, decode_us
+
+
+def main() -> str:
+    print("\n== Serving path (reduced configs, CPU wall-clock) ==")
+    parts = []
+    decode_us_first = 0.0
+    for arch in REPS:
+        pre_s, dec_us = bench_arch(arch)
+        if not decode_us_first:
+            decode_us_first = dec_us
+        print(f"{arch:24s} prefill={pre_s*1e3:8.1f}ms "
+              f"decode={dec_us/1e3:8.1f}ms/tok")
+        parts.append(f"{arch.split('-')[0]}={dec_us/1e3:.0f}ms")
+    return f"serving,{decode_us_first:.0f},{';'.join(parts)}"
+
+
+if __name__ == "__main__":
+    print(main())

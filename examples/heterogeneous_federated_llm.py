@@ -1,0 +1,63 @@
+"""Non-IID federated LLM training — the paper's Fig. 1 at LLM scale.
+
+Each of M=4 workers holds a DIFFERENT Markov-chain corpus (branching factor
+2,4,8,16: worker 0 has the lowest-entropy, smoothest objective — the LLM
+analogue of a small smoothness constant L_m). CHB should censor the
+low-entropy workers more, reproducing the paper's per-worker ordering in a
+stochastic, non-convex, non-IID setting.
+
+  PYTHONPATH=src python examples/heterogeneous_federated_llm.py --steps 80
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get
+from repro.core import distributed
+from repro.core.chb import FedOptConfig
+from repro.data import lm_data
+from repro.models import model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=80)
+    ap.add_argument("--eps1-scale", type=float, default=2.0)
+    args = ap.parse_args()
+
+    cfg = get("chb-paper-lm-124m").reduced()
+    m, gb, sl, alpha = 4, 16, 128, 0.05
+    fcfg = FedOptConfig(alpha=alpha, beta=0.4,
+                        eps1=args.eps1_scale / (alpha ** 2 * m ** 2),
+                        num_workers=m)
+
+    def loss_fn(p, b):
+        return model.train_loss(p, cfg, b, remat="none")[0]
+
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    state = distributed.init_scan_state(fcfg, params)
+    step = jax.jit(distributed.make_scan_step(fcfg, loss_fn),
+                   donate_argnums=(0, 1))
+    data = lm_data.batch_iterator(cfg, global_batch=gb, seq_len=sl,
+                                  num_workers=m, heterogeneous=True)
+    for s in range(args.steps):
+        params, state, metr = step(params, state, next(data))
+        if s % 10 == 0:
+            print(f"step {s:4d} loss={float(metr['loss']):.4f} "
+                  f"tx={float(metr['transmitted']):.0f}/{m}")
+    counts = np.asarray(state.comm.uplink_count)
+    print("\nper-worker uplinks (branch 2,4,8,16 = rising entropy):", counts)
+    print("entropy floors:", [round(np.log(2 ** (1 + i)), 2)
+                              for i in range(m)])
+    if counts[0] < counts[-1]:
+        print("=> lowest-entropy worker censored most — the paper's Fig.-1 "
+              "ordering reproduces in the non-IID LLM regime.")
+    else:
+        print("=> ordering did NOT reproduce: minibatch-noise magnitudes "
+              "are nearly worker-independent, so the global eq.-(8) test "
+              "flips all workers together (EXPERIMENTS.md P4e).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Quickstart: CHB vs HB/GD/LAG on a 9-worker linear-regression problem.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import baselines, simulator
+from repro.data import paper_tasks
+
+
+def main():
+    bundle = paper_tasks.make_linear_regression()  # paper Fig. 2 setting
+    fstar = simulator.estimate_fstar(bundle.task, bundle.alpha_paper)
+    print(f"9 workers, L={bundle.L:.1f}, alpha=1/L, f*={float(fstar):.4f}\n")
+    print(f"{'algo':6s} {'comms@1e-7':>12s} {'iters@1e-7':>12s}")
+    for name in ("chb", "hb", "lag", "gd"):
+        cfg = baselines.ALGORITHMS[name](bundle.alpha_paper, 9)
+        hist = simulator.run(cfg, bundle.task, 3000)
+        c = simulator.comms_to_accuracy(hist, fstar, 1e-7)
+        k = simulator.iterations_to_accuracy(hist, fstar, 1e-7)
+        print(f"{name:6s} {c:12d} {k:12d}")
+    print("\nCHB: heavy-ball convergence speed at a fraction of the uplinks.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Batched serving example: prefill + decode with KV caches on the reduced
+qwen3-4b config (runs on CPU).
+
+  PYTHONPATH=src python examples/serve_decode.py
+"""
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    raise SystemExit(subprocess.call(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "qwen3-4b",
+         "--reduced", "--batch", "4", "--prompt-len", "64", "--gen", "16"]))

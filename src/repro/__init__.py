@@ -1,0 +1,2 @@
+"""repro: Censored Heavy Ball (CHB) federated training framework in JAX."""
+__version__ = "1.0.0"

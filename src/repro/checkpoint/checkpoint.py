@@ -1,0 +1,60 @@
+"""Pytree checkpointing: flattened-path npz, sharding-aware restore.
+
+save() gathers device arrays to host (fine for the single-process CPU
+container; on a real cluster this is the process-0 path of a distributed
+checkpointer). restore() re-places leaves with the provided shardings.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_SEP = "||"
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V":  # bfloat16 has no numpy equivalent:
+            arr = np.asarray(jax.numpy.asarray(leaf,
+                                               jax.numpy.float32))  # lossless
+        flat[jax.tree_util.keystr(path)] = arr
+    return flat
+
+
+def save(path: str, tree: Any, metadata: Optional[dict] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz",
+             **{k.replace("/", _SEP): v for k, v in flat.items()})
+    if metadata is not None:
+        with open(path.rstrip(".npz") + ".meta.json", "w") as f:
+            json.dump(metadata, f)
+
+
+def restore(path: str, like: Any, shardings: Any = None) -> Any:
+    """Restore into the structure of `like` (a pytree of arrays or SDS)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    flat_sh = (jax.tree_util.tree_leaves(shardings)
+               if shardings is not None else [None] * len(paths))
+    for (p, leaf), sh in zip(paths, flat_sh):
+        key = jax.tree_util.keystr(p).replace("/", _SEP)
+        arr = data[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        arr = jax.numpy.asarray(arr).astype(leaf.dtype)  # bf16 round-trip
+        leaves.append(jax.device_put(arr, sh) if sh is not None else arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_metadata(path: str) -> dict:
+    with open(path.rstrip(".npz") + ".meta.json") as f:
+        return json.load(f)

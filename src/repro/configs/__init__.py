@@ -1,0 +1,2 @@
+from .base import ModelConfig
+from .registry import ARCHS, ASSIGNED, get

@@ -1,0 +1,4 @@
+"""CHB core: the paper's contribution as a composable JAX module."""
+from . import accounting, baselines, censoring, chb, quantize, simulator, util
+from .chb import FedOptConfig, FedOptState, StepInfo, init, step
+from .baselines import ALGORITHMS, chb as make_chb, gd as make_gd, hb as make_hb, lag as make_lag

@@ -1,0 +1,55 @@
+"""Communication accounting.
+
+The paper's headline metric is the number of worker->server (uplink)
+transmissions. On TPU the censoring is realized as a masked collective (see
+DESIGN.md §3), so the wire traffic that *would* occur in a federated
+deployment is tracked here as explicit counters carried through the jitted
+step. Counts are exact (per worker); bytes assume each transmission carries
+the full delta payload (optionally quantized).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CommStats(NamedTuple):
+    """Carried inside optimizer state; all fields are jnp arrays."""
+    uplink_count: jax.Array     # (M,) cumulative transmissions per worker
+    uplink_bytes: jax.Array     # () cumulative uplink payload bytes
+    downlink_count: jax.Array   # () cumulative server broadcasts (1/iter)
+    iterations: jax.Array       # () iterations taken
+
+    @classmethod
+    def init(cls, num_workers: int) -> "CommStats":
+        return cls(
+            uplink_count=jnp.zeros((num_workers,), jnp.int32),
+            uplink_bytes=jnp.zeros((), jnp.int64)
+            if jax.config.read("jax_enable_x64") else jnp.zeros((), jnp.float32),
+            downlink_count=jnp.zeros((), jnp.int32),
+            iterations=jnp.zeros((), jnp.int32),
+        )
+
+    def update(self, mask: jax.Array, payload_bytes) -> "CommStats":
+        """mask: (M,) float/bool transmit indicators for this iteration."""
+        mask_i = mask.astype(jnp.int32)
+        pb = jnp.asarray(payload_bytes, self.uplink_bytes.dtype)
+        return CommStats(
+            uplink_count=self.uplink_count + mask_i,
+            uplink_bytes=self.uplink_bytes
+            + jnp.sum(mask.astype(self.uplink_bytes.dtype)) * pb,
+            downlink_count=self.downlink_count + 1,
+            iterations=self.iterations + 1,
+        )
+
+    @property
+    def total_uplinks(self) -> jax.Array:
+        return jnp.sum(self.uplink_count)
+
+    def savings_vs_dense(self) -> jax.Array:
+        """Fraction of uplinks censored vs. transmit-every-iteration."""
+        m = self.uplink_count.shape[0]
+        dense = self.iterations.astype(jnp.float32) * m
+        return 1.0 - self.total_uplinks.astype(jnp.float32) / jnp.maximum(dense, 1.0)

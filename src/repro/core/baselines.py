@@ -1,0 +1,43 @@
+"""Named constructors for the algorithm family benchmarked in the paper.
+
+All four share the FedOptConfig/step machinery in core/chb.py, which makes
+the comparisons in benchmarks/ apples-to-apples: identical gradient
+computation, identical accounting, only (beta, eps1) differ.
+"""
+from __future__ import annotations
+
+from .chb import FedOptConfig
+from .censoring import paper_eps1
+
+
+def gd(alpha: float, num_workers: int, **kw) -> FedOptConfig:
+    """Classical distributed gradient descent (every worker transmits)."""
+    return FedOptConfig(alpha=alpha, num_workers=num_workers,
+                        beta=0.0, eps1=0.0, **kw)
+
+
+def hb(alpha: float, num_workers: int, beta: float = 0.4, **kw) -> FedOptConfig:
+    """Classical heavy ball (eq. 2); paper default beta=0.4."""
+    return FedOptConfig(alpha=alpha, num_workers=num_workers,
+                        beta=beta, eps1=0.0, **kw)
+
+
+def lag(alpha: float, num_workers: int, eps1: float | None = None,
+        eps1_scale: float = 0.1, **kw) -> FedOptConfig:
+    """Censoring-based GD (LAG-WK, ref. [54]) with the shared condition (8)."""
+    if eps1 is None:
+        eps1 = paper_eps1(alpha, num_workers, eps1_scale)
+    return FedOptConfig(alpha=alpha, num_workers=num_workers,
+                        beta=0.0, eps1=eps1, **kw)
+
+
+def chb(alpha: float, num_workers: int, beta: float = 0.4,
+        eps1: float | None = None, eps1_scale: float = 0.1, **kw) -> FedOptConfig:
+    """The paper's algorithm with its Sec.-IV default constants."""
+    if eps1 is None:
+        eps1 = paper_eps1(alpha, num_workers, eps1_scale)
+    return FedOptConfig(alpha=alpha, num_workers=num_workers,
+                        beta=beta, eps1=eps1, **kw)
+
+
+ALGORITHMS = {"gd": gd, "hb": hb, "lag": lag, "chb": chb}

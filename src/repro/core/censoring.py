@@ -1,0 +1,97 @@
+"""The CHB-skip-transmission condition (paper eq. 8) and parameter feasibility.
+
+A worker m transmits its gradient delta at iteration k iff
+
+    || grad_m(theta^k) - grad_m(theta_hat_m^{k-1}) ||^2  >  eps1 * || theta^k - theta^{k-1} ||^2
+
+Both sides are *global* squared l2 norms over the whole parameter pytree,
+matching the paper's single-vector view of theta.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .util import tree_sqnorm
+
+
+def skip_condition(delta_sqnorm: jax.Array, step_sqnorm: jax.Array,
+                   eps1) -> jax.Array:
+    """True where the worker is CENSORED (does not transmit). Eq. (8)."""
+    return delta_sqnorm <= eps1 * step_sqnorm
+
+
+def transmit_mask(delta_sqnorm: jax.Array, step_sqnorm: jax.Array,
+                  eps1) -> jax.Array:
+    """1.0 where the worker transmits, 0.0 where censored. Shape (M,)."""
+    return (delta_sqnorm > eps1 * step_sqnorm).astype(jnp.float32)
+
+
+def delta_sqnorms(delta_stacked) -> jax.Array:
+    """Per-worker global squared norms of a leading-M stacked delta pytree."""
+    leaves = jax.tree_util.tree_leaves(delta_stacked)
+    m = leaves[0].shape[0]
+    acc = jnp.zeros((m,), jnp.float32)
+    for x in leaves:
+        acc = acc + jnp.sum(
+            jnp.square(x.astype(jnp.float32)).reshape(m, -1), axis=1)
+    return acc
+
+
+def paper_eps1(alpha: float, num_workers: int, scale: float = 0.1) -> float:
+    """The paper's practical choice eps1 = scale/(alpha^2 M^2) (Sec. IV)."""
+    return scale / (alpha ** 2 * num_workers ** 2)
+
+
+@dataclasses.dataclass(frozen=True)
+class FeasibleParams:
+    """A parameter triple inside the theoretical region (10)-(12)."""
+    alpha: float
+    beta: float
+    eps1: float
+    rate: float  # guaranteed contraction factor c(alpha, beta, eps1)
+
+
+def theoretical_params(L: float, mu: float, num_workers: int,
+                       delta: float = 0.5, rho3: float = 1.0) -> FeasibleParams:
+    """Corner of the feasible region from Appendix C eq. (55).
+
+    With rho3=1, alpha=(1-delta)/L, eta1=(1-alpha L)/(2 alpha):
+      beta  = 0.5 * sqrt((1-alpha L)(1-alpha mu))
+      eps1  = (1-alpha L)(1-alpha mu) / (4 alpha^2 M^2)
+    giving c = alpha*mu = (1-delta)/(L/mu) — the same order as classical HB.
+    """
+    if not 0.0 < delta < 1.0:
+        raise ValueError("delta must be in (0,1)")
+    alpha = (1.0 - delta) / L
+    al = alpha * L
+    am = alpha * mu
+    beta = 0.5 * math.sqrt((1.0 - al) * (1.0 - am))
+    eps1 = (1.0 - al) * (1.0 - am) / (4.0 * alpha ** 2 * num_workers ** 2)
+    return FeasibleParams(alpha=alpha, beta=beta, eps1=eps1, rate=am)
+
+
+def check_feasible(alpha: float, beta: float, eps1: float, L: float,
+                   num_workers: int, rho3: float = 1.0) -> bool:
+    """Check the simplified condition (14)/(43) with eta1=(1-alpha L)/(2 alpha).
+
+    alpha <= 1/L,  beta^2 (1+1/rho3) <= 1 - alpha L,
+    eps1 <= ((1-alpha L) - beta^2 (1+1/rho3)) / (alpha^2 (1+rho3) M^2)
+    (conservatively using |M_c^k| <= M).
+    """
+    if alpha > 1.0 / L:
+        return False
+    slack = (1.0 - alpha * L) - beta ** 2 * (1.0 + 1.0 / rho3)
+    if slack < 0:
+        return False
+    bound = slack / (alpha ** 2 * (1.0 + rho3) * num_workers ** 2)
+    return eps1 <= bound + 1e-12
+
+
+def step_sqnorm(params, prev_params) -> jax.Array:
+    """|| theta^k - theta^{k-1} ||^2 over the whole pytree."""
+    diff = jax.tree_util.tree_map(jnp.subtract, params, prev_params)
+    return tree_sqnorm(diff)

@@ -1,0 +1,247 @@
+"""Censored Heavy Ball (CHB) — the paper's Algorithm 1 as a pytree optimizer.
+
+One parameterized implementation covers the whole algorithm family used in
+the paper's experiments:
+
+    GD      alpha>0, beta=0,   eps1=0
+    HB      alpha>0, beta>0,   eps1=0      (eq. 2)
+    LAG-WK  alpha>0, beta=0,   eps1>0      (censored GD, ref. [54], using the
+                                            same skip condition (8))
+    CHB     alpha>0, beta>0,   eps1>0      (eqs. 4,5,8)
+
+Semantics are *exactly* Algorithm 1:
+  * each worker m keeps the last gradient it transmitted, ghat_m
+    (stacked pytree with leading axis M),
+  * worker m transmits delta_m = g_m - ghat_m iff
+    ||delta_m||^2 > eps1 * ||theta^k - theta^{k-1}||^2   (eq. 8),
+  * the server aggregate is grad_k = sum_m ghat_m^k; we recompute it from the
+    bank instead of carrying the eq. (5) recursion explicitly — algebraically
+    identical, and saves one parameter-sized buffer (DESIGN.md §3),
+  * server update theta^{k+1} = theta^k - alpha*grad_k + beta*(theta^k -
+    theta^{k-1})  (eq. 4).
+
+Optionally the transmitted deltas are int8-quantized with error feedback
+(beyond paper; core/quantize.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .accounting import CommStats
+from .censoring import delta_sqnorms, step_sqnorm, transmit_mask
+from .quantize import (payload_bytes_dense, payload_bytes_int8,
+                       tree_quantize_roundtrip)
+from .util import tree_stack_zeros, tree_sqnorm, tree_sum_leading
+
+
+@dataclasses.dataclass(frozen=True)
+class FedOptConfig:
+    """Configuration for the CHB family."""
+    alpha: float
+    num_workers: int
+    beta: float = 0.0
+    eps1: float = 0.0
+    quantize: Optional[str] = None  # None | "int8"
+    # dtype for the stale-gradient bank (bf16 halves state memory at scale)
+    bank_dtype: Any = None
+    # BEYOND PAPER (the paper's Sec.-V open problem: "finding an optimal
+    # approach to tune eps1"): when adaptive > 0, worker m transmits iff
+    # ||delta_m||^2 > adaptive * EMA_m(||delta_m||^2) — a scale-free
+    # relative-novelty test that needs no knowledge of L or the step norm
+    # and keeps working in the stochastic-gradient regime. adaptive in
+    # (0, 1): censors the below-usual-novelty fraction of rounds.
+    adaptive: float = 0.0
+    adaptive_decay: float = 0.9
+    # BEYOND PAPER: censoring granularity. The paper treats theta as one
+    # vector ("global"); "per_tensor" applies the eq.-(8) test per parameter
+    # tensor — a worker uploads only the tensors whose delta is novel
+    # (embeddings/heads churn differently from deep blocks in LLMs), with
+    # bytes accounted per transmitted tensor.
+    granularity: str = "global"    # "global" | "per_tensor"
+
+    @property
+    def name(self) -> str:
+        if self.eps1 > 0 and self.beta > 0:
+            return "chb"
+        if self.eps1 > 0:
+            return "lag"
+        if self.beta > 0:
+            return "hb"
+        return "gd"
+
+
+class FedOptState(NamedTuple):
+    prev_params: Any          # theta^{k-1}
+    ghat: Any                 # (M, ...) stale-gradient bank
+    err: Any                  # (M, ...) quantization error feedback (zeros if off)
+    comm: CommStats
+    ema: Any = ()             # (M,) EMA of ||delta||^2 (adaptive mode)
+
+
+class StepInfo(NamedTuple):
+    mask: jax.Array           # (M,) 1=transmitted
+    delta_sq: jax.Array       # (M,) ||delta_m||^2
+    step_sq: jax.Array        # () ||theta^k - theta^{k-1}||^2
+    agg_grad_sqnorm: jax.Array  # () ||grad_k||^2 (paper's NN metric, squared)
+
+
+def init(cfg: FedOptConfig, params) -> FedOptState:
+    bank = tree_stack_zeros(params, cfg.num_workers)
+    if cfg.bank_dtype is not None:
+        bank = jax.tree_util.tree_map(
+            lambda x: x.astype(cfg.bank_dtype), bank)
+    err = tree_stack_zeros(params, cfg.num_workers) if cfg.quantize else \
+        jax.tree_util.tree_map(lambda x: jnp.zeros((0,), x.dtype), params)
+    return FedOptState(
+        prev_params=params,
+        ghat=bank,
+        err=err,
+        comm=CommStats.init(cfg.num_workers),
+        ema=jnp.zeros((cfg.num_workers,), jnp.float32)
+        if cfg.adaptive > 0 else (),
+    )
+
+
+def _bcast(mask: jax.Array, leaf: jax.Array) -> jax.Array:
+    """Broadcast per-worker mask (M,) against a leading-M leaf."""
+    return mask.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
+
+
+def step(cfg: FedOptConfig, state: FedOptState, params, worker_grads):
+    """One iteration of Algorithm 1.
+
+    Args:
+      cfg: algorithm constants.
+      state: optimizer state.
+      params: theta^k.
+      worker_grads: pytree stacked with leading axis M — grad of each
+        worker's *local* objective f_m at theta^k.
+    Returns:
+      (new_params, new_state, StepInfo)
+    """
+    cast = lambda t, ref: jax.tree_util.tree_map(
+        lambda x, r: x.astype(r.dtype), t, ref)
+    # delta_m = g_m - ghat_m  (in the bank's dtype for exact server/worker sync)
+    delta = jax.tree_util.tree_map(
+        lambda g, h: g.astype(h.dtype) - h, worker_grads, state.ghat)
+    if cfg.quantize:
+        # pending correction = delta + error-feedback residual
+        pending = jax.tree_util.tree_map(jnp.add, delta, cast(state.err, delta))
+    else:
+        pending = delta
+
+    if cfg.granularity == "per_tensor" and cfg.eps1 > 0:
+        return _step_per_tensor(cfg, state, params, pending)
+
+    dsq = delta_sqnorms(pending)
+    ssq = step_sqnorm(params, state.prev_params)
+    if cfg.adaptive > 0:
+        # relative-novelty censoring (beyond paper; see FedOptConfig)
+        warm = state.ema > 0
+        mask = jnp.where(warm,
+                         (dsq > cfg.adaptive * state.ema)
+                         .astype(jnp.float32), 1.0)
+        new_ema = jnp.where(warm,
+                            cfg.adaptive_decay * state.ema
+                            + (1 - cfg.adaptive_decay) * dsq, dsq)
+    elif cfg.eps1 > 0:
+        mask = transmit_mask(dsq, ssq, cfg.eps1)
+        new_ema = state.ema
+    else:
+        mask = jnp.ones((cfg.num_workers,), jnp.float32)
+        new_ema = state.ema
+
+    if cfg.quantize == "int8":
+        payload = jax.tree_util.tree_map(
+            lambda x: x, tree_quantize_roundtrip(pending))
+        new_err = jax.tree_util.tree_map(
+            lambda p, q, e: _bcast(mask, p) * (p - q)
+            + (1.0 - _bcast(mask, p)) * e.astype(p.dtype),
+            pending, payload, cast(state.err, pending))
+        per_tx_bytes = payload_bytes_int8(params)
+    else:
+        payload = pending
+        new_err = state.err
+        per_tx_bytes = payload_bytes_dense(params)
+
+    # server/worker synchronized advance of the stale bank
+    new_ghat = jax.tree_util.tree_map(
+        lambda h, q: h + _bcast(mask, h) * q.astype(h.dtype),
+        state.ghat, payload)
+
+    # grad_k = sum_m ghat_m^k  (== eq. (5) recursion unrolled)
+    agg = tree_sum_leading(new_ghat)
+
+    # eq. (4): theta^{k+1} = theta^k - alpha*grad_k + beta*(theta^k - theta^{k-1})
+    new_params = jax.tree_util.tree_map(
+        lambda t, g, tp: (t - cfg.alpha * g.astype(t.dtype)
+                          + cfg.beta * (t - tp)).astype(t.dtype),
+        params, agg, state.prev_params)
+
+    info = StepInfo(mask=mask, delta_sq=dsq, step_sq=ssq,
+                    agg_grad_sqnorm=tree_sqnorm(agg))
+    new_state = FedOptState(
+        prev_params=params,
+        ghat=new_ghat,
+        err=new_err,
+        comm=state.comm.update(mask, per_tx_bytes),
+        ema=new_ema,
+    )
+    return new_params, new_state, info
+
+
+def _step_per_tensor(cfg: FedOptConfig, state: FedOptState, params, pending):
+    """Per-tensor censoring (beyond paper; FedOptConfig.granularity).
+
+    The eq.-(8) test is applied independently per parameter tensor:
+    worker m transmits tensor t iff ||delta_m[t]||^2 > eps1*||dtheta[t]||^2.
+    Quantization/error-feedback is not combined with this mode (kept simple);
+    uplink bytes are accounted per transmitted tensor, uplink *count* counts
+    a worker-iteration as transmitting if ANY of its tensors ships (so the
+    headline count stays comparable with global censoring).
+    """
+    assert not cfg.quantize, "per_tensor + quantize not supported"
+    leaves_delta, treedef = jax.tree_util.tree_flatten(pending)
+    leaves_theta = treedef.flatten_up_to(params)
+    leaves_prev = treedef.flatten_up_to(state.prev_params)
+    leaves_ghat = treedef.flatten_up_to(state.ghat)
+
+    m = cfg.num_workers
+    bdt = state.comm.uplink_bytes.dtype
+    new_ghat, bytes_up = [], jnp.zeros((), bdt)
+    any_mask = jnp.zeros((m,), jnp.float32)
+    for d, t, tp, h in zip(leaves_delta, leaves_theta, leaves_prev,
+                           leaves_ghat):
+        dsq_t = jnp.sum(jnp.square(d.astype(jnp.float32)).reshape(m, -1),
+                        axis=1)                              # (M,)
+        ssq_t = jnp.sum(jnp.square(t.astype(jnp.float32)
+                                   - tp.astype(jnp.float32)))
+        mask_t = (dsq_t > cfg.eps1 * ssq_t).astype(jnp.float32)
+        any_mask = jnp.maximum(any_mask, mask_t)
+        bytes_up = bytes_up + (jnp.sum(mask_t)
+                               * (d[0].size * d.dtype.itemsize)).astype(bdt)
+        new_ghat.append(h + _bcast(mask_t, h) * d.astype(h.dtype))
+    new_ghat = jax.tree_util.tree_unflatten(treedef, new_ghat)
+
+    agg = tree_sum_leading(new_ghat)
+    new_params = jax.tree_util.tree_map(
+        lambda t, g, tp: (t - cfg.alpha * g.astype(t.dtype)
+                          + cfg.beta * (t - tp)).astype(t.dtype),
+        params, agg, state.prev_params)
+    comm = CommStats(
+        uplink_count=state.comm.uplink_count + any_mask.astype(jnp.int32),
+        uplink_bytes=state.comm.uplink_bytes + bytes_up,
+        downlink_count=state.comm.downlink_count + 1,
+        iterations=state.comm.iterations + 1,
+    )
+    info = StepInfo(mask=any_mask,
+                    delta_sq=delta_sqnorms(pending),
+                    step_sq=step_sqnorm(params, state.prev_params),
+                    agg_grad_sqnorm=tree_sqnorm(agg))
+    new_state = FedOptState(prev_params=params, ghat=new_ghat,
+                            err=state.err, comm=comm, ema=state.ema)
+    return new_params, new_state, info

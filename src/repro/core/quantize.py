@@ -1,0 +1,53 @@
+"""Beyond-paper: int8 quantization of transmitted deltas with error feedback.
+
+The paper (Sec. V) notes CHB "can potentially be applied along with other
+complementary techniques such as quantization" — this module does exactly
+that. Each worker keeps a local error accumulator e_m. When it transmits,
+the payload is q = Q(delta + e_m) and the residual e_m <- delta + e_m - q is
+kept locally. The server (and the worker's own stale-gradient copy) advance
+by q, so worker and server views never diverge. Error feedback guarantees the
+quantization noise telescopes instead of accumulating.
+
+Quantizer: symmetric per-tensor int8 with a float32 scale. Payload size is
+1 byte/element + 4 bytes/tensor, i.e. ~2x smaller than bf16 and ~4x smaller
+than f32 uplinks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization. Returns (q_int8, scale)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array,
+                    dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def quantize_roundtrip(x: jax.Array) -> jax.Array:
+    """Q(x) as the value the receiver reconstructs (same dtype as x)."""
+    q, s = quantize_int8(x)
+    return dequantize_int8(q, s, x.dtype)
+
+
+def tree_quantize_roundtrip(tree):
+    """Per-leaf int8 round-trip of a delta pytree."""
+    return jax.tree_util.tree_map(quantize_roundtrip, tree)
+
+
+def payload_bytes_int8(tree) -> int:
+    """Uplink bytes for one quantized transmission of this pytree."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return sum(x.size for x in leaves) + 4 * len(leaves)
+
+
+def payload_bytes_dense(tree) -> int:
+    """Uplink bytes for one unquantized transmission."""
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))

@@ -1,0 +1,58 @@
+"""Pytree utilities shared by the CHB core."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_sqnorm(tree) -> jax.Array:
+    """Global squared l2 norm over every leaf of a pytree (scalar)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros(())
+    return sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree_util.tree_map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree_util.tree_map(lambda x: x * s, a)
+
+
+def tree_zeros_like(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def tree_stack_zeros(tree, m: int):
+    """Zeros pytree with an extra leading axis of size ``m``."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros((m,) + x.shape, x.dtype), tree
+    )
+
+
+def tree_count_params(tree) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_worker_slice(tree, m):
+    """Select worker ``m`` from a pytree whose leaves have leading axis M."""
+    return jax.tree_util.tree_map(lambda x: x[m], tree)
+
+
+def tree_sum_leading(tree):
+    """Sum each leaf over its leading (worker) axis."""
+    return jax.tree_util.tree_map(lambda x: jnp.sum(x, axis=0), tree)
+
+
+def tree_cast(tree, dtype):
+    return jax.tree_util.tree_map(lambda x: x.astype(dtype), tree)

@@ -1,0 +1,1 @@
+from . import lm_data, paper_tasks

@@ -1,0 +1,1 @@
+from . import censor, decode_attention, flash_attention, hb_update, ops, ref

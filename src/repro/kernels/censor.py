@@ -1,0 +1,96 @@
+"""Fused censoring kernels (the CHB hot spot added on top of a train step).
+
+Naively, the eq.-(8) test + bank advance costs three HBM sweeps per
+parameter tensor per worker: (1) delta = g - ghat, (2) ||delta||^2
+reduction, (3) select ghat' = g or ghat. We fuse into two single-sweep
+kernels:
+
+  censor_delta_sqnorm : one pass, emits per-tile partial sums of
+                        ||g - ghat||^2 (f32 accumulation in VMEM)
+  censor_select       : one pass, ghat' = transmit ? g : ghat
+
+Block shapes are (8k, 128)-aligned for f32 / (16k, 128) for bf16 VMEM tiles.
+Validated in interpret mode against kernels/ref.py.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+_LANES = 128
+
+
+def _pad_to_2d(x: jax.Array, rows: int) -> jax.Array:
+    """Flatten to (R, 128) padding with zeros; R a multiple of `rows`."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    cols = _LANES
+    r = math.ceil(n / cols)
+    r = math.ceil(r / rows) * rows
+    pad = r * cols - n
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(r, cols)
+
+
+def _delta_sqnorm_kernel(g_ref, h_ref, out_ref):
+    d = g_ref[...].astype(jnp.float32) - h_ref[...].astype(jnp.float32)
+    out_ref[0, 0] = jnp.sum(d * d)
+
+
+def censor_delta_sqnorm(g: jax.Array, ghat: jax.Array, *,
+                        block_rows: int = 256,
+                        interpret: bool = True) -> jax.Array:
+    """|| g - ghat ||^2 via a tiled one-sweep Pallas reduction."""
+    assert g.shape == ghat.shape
+    g2 = _pad_to_2d(g, block_rows)
+    h2 = _pad_to_2d(ghat, block_rows)
+    nr = g2.shape[0] // block_rows
+    partials = pl.pallas_call(
+        _delta_sqnorm_kernel,
+        grid=(nr,),
+        in_specs=[
+            pl.BlockSpec((block_rows, _LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, _LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nr, 1), jnp.float32),
+        interpret=interpret,
+    )(g2, h2)
+    return jnp.sum(partials)
+
+
+def _select_kernel(g_ref, h_ref, t_ref, out_ref):
+    transmit = t_ref[0, 0] != 0
+    g = g_ref[...].astype(out_ref.dtype)
+    h = h_ref[...]
+    out_ref[...] = jnp.where(transmit, g, h)
+
+
+def censor_select(g: jax.Array, ghat: jax.Array, transmit: jax.Array, *,
+                  block_rows: int = 256, interpret: bool = True) -> jax.Array:
+    """ghat' = transmit ? g : ghat — single fused sweep."""
+    assert g.shape == ghat.shape
+    orig_shape, orig_dtype = ghat.shape, ghat.dtype
+    g2 = _pad_to_2d(g, block_rows)
+    h2 = _pad_to_2d(ghat, block_rows)
+    t = jnp.asarray(transmit, jnp.int32).reshape(1, 1)
+    nr = g2.shape[0] // block_rows
+    out = pl.pallas_call(
+        _select_kernel,
+        grid=(nr,),
+        in_specs=[
+            pl.BlockSpec((block_rows, _LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, _LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, _LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(h2.shape, orig_dtype),
+        interpret=interpret,
+    )(g2, h2, t)
+    n = math.prod(orig_shape)
+    return out.reshape(-1)[:n].reshape(orig_shape)

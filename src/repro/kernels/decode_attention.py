@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: single-query (decode) attention over a ring KV cache.
+
+The decode hot path reads the whole cache once per step; fusing the
+validity mask (ring-slot positions), softmax and weighted sum keeps it a
+single HBM sweep. Grid (B, KV-heads, cache blocks): the cache-block index is
+minor-most, so the online-softmax state for all G=H/K query heads of one kv
+head lives in VMEM scratch.
+
+Block shape (bc, d) over the cache: bc=512 rows x head_dim, (8,128)-tile
+aligned. Validated in interpret mode against the pure-jnp oracle
+(repro.models.layers.decode_attention's math).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _kernel(scale, bc, nc, g,
+            q_ref, k_ref, v_ref, pos_ref, cpos_ref, o_ref,
+            acc_ref, m_ref, l_ref):
+    cj = pl.program_id(2)
+
+    @pl.when(cj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (G, d)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bc, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = (q @ k.T) * scale                                # (G, bc)
+    cpos = cpos_ref[0]                                   # (bc,) slot positions
+    valid = (cpos >= 0) & (cpos <= pos_ref[0])
+    s = jnp.where(valid[None, :], s, _NEG)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_prev * alpha + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(cj == nc - 1)
+    def _done():
+        l_safe = jnp.maximum(l_ref[...], 1e-37)
+        o_ref[0, 0] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k_cache, v_cache, cache_pos, pos, *,
+                            scale=None, block: int = 512,
+                            interpret: bool = True) -> jax.Array:
+    """q: (B, H, d); caches: (B, K, C, d); cache_pos: (C,) abs positions
+    (-1 empty); pos: () current position. Returns (B, H, d)."""
+    b, h, d = q.shape
+    kh, c = k_cache.shape[1], k_cache.shape[2]
+    assert h % kh == 0
+    g = h // kh
+    bc = min(block, c)
+    assert c % bc == 0, (c, bc)
+    nc = c // bc
+    if scale is None:
+        scale = d ** -0.5
+    q4 = q.reshape(b, kh, g, d)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+    cpos = cache_pos.astype(jnp.int32).reshape(1, c)
+
+    kernel = functools.partial(_kernel, float(scale), bc, nc, g)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kh, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, kh_, cj: (b_, kh_, 0, 0)),
+            pl.BlockSpec((1, 1, bc, d), lambda b_, kh_, cj: (b_, kh_, cj, 0)),
+            pl.BlockSpec((1, 1, bc, d), lambda b_, kh_, cj: (b_, kh_, cj, 0)),
+            pl.BlockSpec((1,), lambda b_, kh_, cj: (0,)),
+            pl.BlockSpec((1, bc), lambda b_, kh_, cj: (0, cj)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda b_, kh_, cj: (b_, kh_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q4, k_cache, v_cache, pos_arr, cpos)
+    return out.reshape(b, h, d)
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_pos, pos, scale=None):
+    """Pure-jnp oracle."""
+    b, h, d = q.shape
+    kh = k_cache.shape[1]
+    g = h // kh
+    if scale is None:
+        scale = d ** -0.5
+    q4 = q.reshape(b, kh, g, d).astype(jnp.float32)
+    kt = k_cache.astype(jnp.float32)
+    s = jnp.einsum("bkgd,bkcd->bkgc", q4, kt) * scale
+    valid = (cache_pos >= 0) & (cache_pos <= pos)
+    s = jnp.where(valid[None, None, None, :], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgc,bkcd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, h, d).astype(q.dtype)

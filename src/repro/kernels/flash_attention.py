@@ -1,0 +1,107 @@
+"""Pallas TPU flash-attention forward kernel (inference/prefill path).
+
+Grid (B, H, nq, nk): the kv index is the minor-most grid dimension, so each
+(b, h, qi) output block is revisited across kj steps and the online-softmax
+state lives in VMEM scratch. Block shapes default to 512 q / 512 kv rows —
+multiples of the (8,128) f32 / (16,128) bf16 TPU tile; the (bq, bk) f32
+score block is 1 MiB, comfortably inside the ~16 MiB/core VMEM budget
+together with the q/k/v tiles.
+
+GQA is handled in the kv BlockSpec index map (kv head = h // group).
+Causal and sliding-window masks are applied with absolute block offsets.
+Training uses the custom-vjp pure-JAX flash in repro.models.flash; this
+kernel is the TPU-native forward for serving, validated in interpret mode
+against kernels/ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _kernel(causal, window, scale, bq, bk, nk,
+            q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)          # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = (q @ k.T) * scale                        # (bq, bk)
+
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    s = jnp.where(mask, s, _NEG)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        l_safe = jnp.maximum(l_ref[...], 1e-37)
+        o_ref[0, 0] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           window: int | None = None,
+                           scale: float | None = None,
+                           q_block: int = 512, kv_block: int = 512,
+                           interpret: bool = True) -> jax.Array:
+    """q: (B, H, Lq, d); k, v: (B, K, S, d); returns (B, H, Lq, d)."""
+    b, h, lq, d = q.shape
+    kh, s_len = k.shape[1], k.shape[2]
+    assert h % kh == 0
+    g = h // kh
+    bq = min(q_block, lq)
+    bk = min(kv_block, s_len)
+    assert lq % bq == 0 and s_len % bk == 0
+    nq, nk = lq // bq, s_len // bk
+    if scale is None:
+        scale = d ** -0.5
+
+    kernel = functools.partial(_kernel, causal, window, float(scale),
+                               bq, bk, nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, qi, kj: (b_, h_, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, qi, kj: (b_, h_ // g, kj, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, qi, kj: (b_, h_ // g, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda b_, h_, qi, kj: (b_, h_, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, lq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,55 @@
+"""Jit-compiled wrappers around the Pallas kernels with jnp fallbacks.
+
+On CPU (this container) kernels run in interpret mode for validation; on a
+real TPU set interpret=False (the default flips on backend detection).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import censor, flash_attention, hb_update, ref
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def censor_delta_sqnorm(g, ghat, use_pallas: bool = True):
+    if use_pallas:
+        return censor.censor_delta_sqnorm(g, ghat,
+                                          interpret=_interpret_default())
+    return ref.censor_delta_sqnorm(g, ghat)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def censor_select(g, ghat, transmit, use_pallas: bool = True):
+    if use_pallas:
+        return censor.censor_select(g, ghat, transmit,
+                                    interpret=_interpret_default())
+    return ref.censor_select(g, ghat, transmit)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "beta", "use_pallas"))
+def hb_param_update(theta, nabla, theta_prev, alpha: float, beta: float,
+                    use_pallas: bool = True):
+    if use_pallas:
+        return hb_update.hb_update(theta, nabla, theta_prev, alpha, beta,
+                                   interpret=_interpret_default())
+    return ref.hb_update(theta, nabla, theta_prev, alpha, beta)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "q_block",
+                                    "kv_block", "use_pallas"))
+def flash_attention_fwd(q, k, v, causal: bool = True, window=None,
+                        q_block: int = 512, kv_block: int = 512,
+                        use_pallas: bool = True):
+    if use_pallas:
+        return flash_attention.flash_attention_pallas(
+            q, k, v, causal=causal, window=window, q_block=q_block,
+            kv_block=kv_block, interpret=_interpret_default())
+    return ref.flash_attention_fwd(q, k, v, causal=causal, window=window)

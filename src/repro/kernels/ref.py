@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def censor_delta_sqnorm(g: jax.Array, ghat: jax.Array) -> jax.Array:
+    """|| g - ghat ||^2 in f32 (per-tensor partial of the eq.-(8) test)."""
+    d = g.astype(jnp.float32) - ghat.astype(jnp.float32)
+    return jnp.sum(d * d)
+
+
+def censor_select(g: jax.Array, ghat: jax.Array,
+                  transmit: jax.Array) -> jax.Array:
+    """ghat' = g where transmitted else ghat (worker-side bank advance)."""
+    return jnp.where(transmit.astype(bool), g.astype(ghat.dtype), ghat)
+
+
+def hb_update(theta: jax.Array, nabla: jax.Array, theta_prev: jax.Array,
+              alpha: float, beta: float) -> jax.Array:
+    """Eq. (4): theta - alpha*nabla + beta*(theta - theta_prev), f32 math."""
+    t = theta.astype(jnp.float32)
+    out = t - alpha * nabla.astype(jnp.float32) \
+        + beta * (t - theta_prev.astype(jnp.float32))
+    return out.astype(theta.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True,
+                        window=None, scale=None):
+    """Naive attention oracle; q (B,H,L,d), k/v (B,K,S,d)."""
+    from ..models.flash import reference_attention
+    return reference_attention(q, k, v, causal=causal, window=window,
+                               scale=scale)

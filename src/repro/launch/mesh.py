@@ -1,0 +1,33 @@
+"""Production meshes. Functions, not module constants — importing this module
+never touches jax device state (dryrun.py must set XLA_FLAGS first)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; multi_pod stacks 2 pods = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+
+
+def make_local_mesh(model_parallel: int = 1, *, pods: int = 1):
+    """Mesh over whatever devices exist (CPU tests / small runs)."""
+    n = jax.device_count()
+    assert n % (model_parallel * pods) == 0, (n, model_parallel, pods)
+    if pods > 1:
+        shape = (pods, n // (model_parallel * pods), model_parallel)
+        axes = ("pod", "data", "model")
+    else:
+        shape = (n // model_parallel, model_parallel)
+        axes = ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+
+
+def dp_axes(mesh) -> tuple:
+    """Axes used for batch/FSDP sharding (pod+data when present)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)

@@ -1,0 +1,126 @@
+"""Parameter / activation / cache sharding rules (DESIGN.md §5).
+
+Generic rule: for a weight leaf, the LAST dim is tensor-parallel ("model"),
+the SECOND-TO-LAST is FSDP ("data", plus "pod" for the scan strategy on the
+multi-pod mesh) — each applied only when divisible by the mesh axis size.
+Leaves under "blocks" carry a leading superblock-stack axis that is never
+sharded. 1-D leaves (norms, biases, dt_bias, ...) are replicated.
+
+The pod strategy overrides fsdp_axes=("data",) so params stay replicated
+across pods (the federated-worker boundary).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .mesh import dp_axes
+
+
+def _axis_size(mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _maybe(dim: int, axes, mesh):
+    if axes and dim % _axis_size(mesh, axes) == 0:
+        return axes if isinstance(axes, str) else tuple(axes)
+    return None
+
+
+def param_spec(path: str, shape: tuple, mesh, *, fsdp_axes=None,
+               tp_axis: str = "model", gather_safe: bool = False) -> P:
+    """PartitionSpec for one parameter leaf identified by its tree path.
+
+    gather_safe: keep gather-consumed tables (embeddings) single-axis
+    sharded — XLA's SPMD partitioner CHECK-fails on a 2-axis-sharded gather
+    operand inside a partial-manual (shard_map over "pod") region.
+    """
+    if fsdp_axes is None:
+        fsdp_axes = dp_axes(mesh)
+    fsdp_axes = tuple(a for a in fsdp_axes if a in mesh.axis_names)
+    stacked = "blocks" in path
+    nd = len(shape)
+    eff = nd - (1 if stacked else 0)       # dims after the stack axis
+    spec = [None] * nd
+    if eff >= 2:
+        spec[-1] = _maybe(shape[-1], tp_axis, mesh)
+        if not (gather_safe and "embed" in path):
+            spec[-2] = _maybe(shape[-2], fsdp_axes, mesh)
+    return P(*spec)
+
+
+def params_shardings(params_shapes: Any, mesh, *, fsdp_axes=None,
+                     gather_safe: bool = False) -> Any:
+    """NamedSharding pytree matching a params (shape) pytree."""
+
+    def one(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        return NamedSharding(mesh, param_spec(pstr, leaf.shape, mesh,
+                                              fsdp_axes=fsdp_axes,
+                                              gather_safe=gather_safe))
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def batch_spec(batch_size: int, mesh) -> P:
+    """Leading-axis sharding for a (B, ...) batch."""
+    dp = dp_axes(mesh)
+    if batch_size % _axis_size(mesh, dp) == 0:
+        return P(dp)
+    if "data" in mesh.axis_names and batch_size % mesh.shape["data"] == 0:
+        return P("data")
+    return P()
+
+
+def worker_batch_spec(mesh) -> P:
+    """(M, B/M, L) worker-chunked batch for the scan strategy."""
+    return P(None, dp_axes(mesh))
+
+
+def cache_shardings(cache_shapes: Any, mesh, batch_size: int) -> Any:
+    """Sharding for decode caches.
+
+    kv leaves: (S, B, C, K, hd); ssm: (S, B, H, N, P); conv: (S, B, W-1, ch).
+    Prefer batch over dp; fall back to sequence/head dims for B=1
+    (long_500k) or non-divisible head counts.
+    """
+    dp = dp_axes(mesh)
+    dp_ok = batch_size % _axis_size(mesh, dp) == 0
+
+    def one(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        bdim = 1                       # (S, B, ...)
+        if dp_ok:
+            spec[bdim] = dp
+        if "ssm" in pstr:              # (S,B,H,N,P)
+            if shape[2] % mesh.shape["model"] == 0:
+                spec[2] = "model"
+            if not dp_ok and shape[2] % _axis_size(mesh, dp + ("model",)) == 0:
+                spec[2] = dp + ("model",)
+        elif "conv" in pstr:           # (S,B,W-1,ch)
+            if shape[3] % mesh.shape["model"] == 0:
+                spec[3] = "model"
+        else:                          # kv: (S,B,C,K,hd)
+            if shape[3] % mesh.shape["model"] == 0:
+                spec[3] = "model"      # heads over tensor axis
+                if not dp_ok and shape[2] % _axis_size(mesh, dp) == 0:
+                    spec[2] = dp       # sequence over dp when B=1
+            elif shape[2] % _axis_size(mesh, dp + ("model",)) == 0 and not dp_ok:
+                spec[2] = dp + ("model",)
+            elif shape[2] % mesh.shape["model"] == 0:
+                spec[2] = "model"      # sequence over tensor axis
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def activation_spec(mesh) -> P:
+    """(B, L, D) activations: batch over dp."""
+    return P(dp_axes(mesh))

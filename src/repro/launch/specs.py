@@ -1,0 +1,233 @@
+"""Input specs (jax.ShapeDtypeStruct stand-ins) and step builders for every
+(architecture x input-shape x mesh) dry-run case. No device allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..core import distributed
+from ..core.chb import FedOptConfig
+from ..models import kvcache, model
+from . import sharding as shr
+from .mesh import dp_axes
+
+
+# The four assigned input shapes.
+INPUT_SHAPES = {
+    "train_4k":    dict(kind="train",   seq_len=4_096,   global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32_768,  global_batch=32),
+    "decode_32k":  dict(kind="decode",  seq_len=32_768,  global_batch=128),
+    "long_500k":   dict(kind="decode",  seq_len=524_288, global_batch=1,
+                        long=True),
+}
+
+
+class DryRunCase(NamedTuple):
+    fn: Callable                     # jit-able step function
+    args: tuple                      # ShapeDtypeStructs (sharding attached)
+    donate: tuple                    # argnums to donate
+    note: str
+
+
+def _sds(shape, dtype, mesh, spec: P):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _tree_sds(shapes_tree, shardings_tree):
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes_tree, shardings_tree)
+
+
+def _stacked_shardings(params_shapes, mesh, leading: Optional[str],
+                       fsdp_axes=None):
+    """Shardings for a leading-M/pod-stacked copy of the params tree."""
+
+    def one(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        base = shr.param_spec(pstr, leaf.shape[1:], mesh, fsdp_axes=fsdp_axes)
+        return NamedSharding(mesh, P(leading, *base))
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def _scalar_sh(mesh):
+    return NamedSharding(mesh, P())
+
+
+def fed_config(cfg: ModelConfig, mesh, strategy: str,
+               num_workers: Optional[int] = None,
+               quantize: Optional[str] = None) -> FedOptConfig:
+    """CHB constants for LLM-scale training (paper Sec. IV style: beta=0.4,
+    eps1=0.1/(alpha^2 M^2) with the LLM step size)."""
+    if strategy == "pod":
+        m = mesh.shape["pod"]
+    else:
+        m = num_workers or 4
+    alpha = 1e-3
+    return FedOptConfig(alpha=alpha, beta=0.4,
+                        eps1=0.1 / (alpha ** 2 * m ** 2),
+                        num_workers=m, quantize=quantize,
+                        bank_dtype=jnp.bfloat16
+                        if cfg.dtype == "bfloat16" else None)
+
+
+def enc_shape(cfg: ModelConfig, batch: int):
+    return (batch, cfg.num_frontend_tokens, cfg.d_frontend)
+
+
+# ------------------------------------------------------------------ train
+def build_train_case(cfg: ModelConfig, shape_name: str, mesh, *,
+                     strategy: str = "scan",
+                     num_workers: Optional[int] = None,
+                     quantize: Optional[str] = None,
+                     remat: str = "full",
+                     moe_mode: str = "scan") -> DryRunCase:
+    info = INPUT_SHAPES[shape_name]
+    assert info["kind"] == "train"
+    seq, gb = info["seq_len"], info["global_batch"]
+    fcfg = fed_config(cfg, mesh, strategy, num_workers, quantize)
+    m = fcfg.num_workers
+    long_mode = bool(info.get("long")) and cfg.long_context_window is not None
+    # inside the pod-manual region only auto axes may appear in constraints
+    act_axes = ("data",) if strategy == "pod" else dp_axes(mesh)
+    act = NamedSharding(mesh, P(act_axes))
+
+    def loss_fn(params, batch):
+        return model.train_loss(params, cfg, batch, moe_mode=moe_mode,
+                                remat=remat, act_spec=act)[0]
+
+    params_shapes = jax.eval_shape(
+        functools.partial(model.init_params, cfg=cfg), jax.random.PRNGKey(0))
+    fsdp = dp_axes(mesh) if strategy == "scan" else ("data",)
+    p_sh = shr.params_shardings(params_shapes, mesh, fsdp_axes=fsdp,
+                                gather_safe=(strategy == "pod"))
+    params_sds = _tree_sds(params_shapes, p_sh)
+
+    if strategy == "scan":
+        state_shapes = jax.eval_shape(
+            functools.partial(distributed.init_scan_state, fcfg),
+            params_shapes)
+        ghat_sh = _stacked_shardings(state_shapes.ghat, mesh, None,
+                                     fsdp_axes=fsdp)
+        step_fn = distributed.make_scan_step(fcfg, loss_fn)
+        batch_shape = (m, gb // m, seq)
+        bspec = P(None, dp_axes(mesh))
+        enc_spec = P(None, dp_axes(mesh))
+        enc_shp = (m, gb // m) + enc_shape(cfg, 1)[1:]
+    else:
+        state_shapes = jax.eval_shape(
+            functools.partial(distributed.init_pod_state, fcfg, mesh=mesh),
+            params_shapes)
+        ghat_sh = _stacked_shardings(state_shapes.ghat, mesh, "pod",
+                                     fsdp_axes=fsdp)
+        step_fn = distributed.make_pod_step(fcfg, loss_fn, mesh)
+        batch_shape = (gb, seq)
+        bspec = P(("pod", "data"))
+        enc_spec = P(("pod", "data"))
+        enc_shp = (gb,) + enc_shape(cfg, 1)[1:]
+
+    err_sh = ghat_sh if fcfg.quantize else ()
+    nabla_sh = p_sh if strategy == "pod" else ()
+    comm_sh = jax.tree_util.tree_map(lambda _: _scalar_sh(mesh),
+                                     state_shapes.comm)
+    state_sh = distributed.DistFedState(
+        prev_params=p_sh, ghat=ghat_sh, nabla=nabla_sh, err=err_sh,
+        comm=comm_sh, step=_scalar_sh(mesh))
+    state_sds = _tree_sds(state_shapes, state_sh)
+
+    batch = {"tokens": _sds(batch_shape, jnp.int32, mesh, bspec),
+             "labels": _sds(batch_shape, jnp.int32, mesh, bspec)}
+    if cfg.frontend:
+        batch["enc_embeddings"] = _sds(enc_shp, cfg.jnp_dtype, mesh, enc_spec)
+
+    def fn(params, state, batch):
+        return step_fn(params, state, batch)
+
+    return DryRunCase(fn=fn, args=(params_sds, state_sds, batch),
+                      donate=(0, 1),
+                      note=f"strategy={strategy} M={m} remat={remat} "
+                           f"quant={quantize} long_mode={long_mode}")
+
+
+# ---------------------------------------------------------------- prefill
+def build_prefill_case(cfg: ModelConfig, shape_name: str, mesh, *,
+                       moe_mode: str = "scan") -> DryRunCase:
+    info = INPUT_SHAPES[shape_name]
+    seq, gb = info["seq_len"], info["global_batch"]
+    long_mode = bool(info.get("long")) and cfg.long_context_window is not None
+    act = NamedSharding(mesh, P(dp_axes(mesh)))
+
+    params_shapes = jax.eval_shape(
+        functools.partial(model.init_params, cfg=cfg), jax.random.PRNGKey(0))
+    p_sh = shr.params_shardings(params_shapes, mesh)
+    params_sds = _tree_sds(params_shapes, p_sh)
+    tokens = _sds((gb, seq), jnp.int32, mesh, shr.batch_spec(gb, mesh))
+    args = [params_sds, tokens]
+
+    if cfg.frontend:
+        enc = _sds(enc_shape(cfg, gb), cfg.jnp_dtype, mesh,
+                   shr.batch_spec(gb, mesh))
+        args.append(enc)
+
+        def fn(params, tokens, enc):
+            return model.prefill(params, cfg, tokens, enc, cache_len=seq,
+                                 long_mode=long_mode, moe_mode=moe_mode,
+                                 act_spec=act)
+    else:
+        def fn(params, tokens):
+            return model.prefill(params, cfg, tokens, cache_len=seq,
+                                 long_mode=long_mode, moe_mode=moe_mode,
+                                 act_spec=act)
+
+    return DryRunCase(fn=fn, args=tuple(args), donate=(),
+                      note=f"long_mode={long_mode}")
+
+
+# ----------------------------------------------------------------- decode
+def build_decode_case(cfg: ModelConfig, shape_name: str, mesh, *,
+                      moe_mode: str = "scan") -> DryRunCase:
+    info = INPUT_SHAPES[shape_name]
+    seq, gb = info["seq_len"], info["global_batch"]
+    long_mode = bool(info.get("long")) and cfg.long_context_window is not None
+
+    params_shapes = jax.eval_shape(
+        functools.partial(model.init_params, cfg=cfg), jax.random.PRNGKey(0))
+    p_sh = shr.params_shardings(params_shapes, mesh)
+    params_sds = _tree_sds(params_shapes, p_sh)
+
+    cache_shapes = jax.eval_shape(
+        functools.partial(kvcache.init_cache, cfg, gb, seq,
+                          long_mode=long_mode))
+    c_sh = shr.cache_shardings(cache_shapes, mesh, gb)
+    cache_sds = _tree_sds(cache_shapes, c_sh)
+
+    tokens = _sds((gb, 1), jnp.int32, mesh, shr.batch_spec(gb, mesh))
+    pos = _sds((), jnp.int32, mesh, P())
+
+    def fn(params, cache, tokens, pos):
+        return model.serve_step(params, cfg, cache, tokens, pos,
+                                long_mode=long_mode, moe_mode=moe_mode)
+
+    return DryRunCase(fn=fn, args=(params_sds, cache_sds, tokens, pos),
+                      donate=(1,),
+                      note=f"cache_len={seq} long_mode={long_mode}")
+
+
+def build_case(cfg: ModelConfig, shape_name: str, mesh, **kw) -> DryRunCase:
+    kind = INPUT_SHAPES[shape_name]["kind"]
+    if kind == "train":
+        return build_train_case(cfg, shape_name, mesh, **kw)
+    if kind == "prefill":
+        kw.pop("strategy", None)
+        return build_prefill_case(cfg, shape_name, mesh, **kw)
+    kw.pop("strategy", None)
+    return build_decode_case(cfg, shape_name, mesh, **kw)

@@ -1,0 +1,1 @@
+from . import flash, kvcache, layers, mamba2, model, moe

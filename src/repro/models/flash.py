@@ -1,0 +1,218 @@
+"""Blocked (flash) attention in pure JAX with a custom VJP.
+
+Memory-bounded attention used for training/prefill at long sequence lengths:
+never materializes the (Lq, S) score matrix; forward keeps only (O, LSE).
+Backward recomputes per-block probabilities (FlashAttention-2 equations).
+
+Supports GQA natively (q heads H = K kv-heads * G groups), causal masking and
+sliding-window masking. This is also the reference semantics for the Pallas
+TPU kernel in repro/kernels/flash_attention.py.
+
+Shapes:
+  q: (B, H, Lq, d)    k, v: (B, K, S, d)    out: (B, H, Lq, d)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+_NEG = -1e30
+
+
+def _block_mask(qi, kj, bq, bk, q_offset, causal, window):
+    """Bool mask (bq, bk) for query block qi vs kv block kj."""
+    qpos = q_offset + qi * bq + lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = kj * bk + lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    m = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        m = m & (kpos <= qpos)
+    if window is not None:
+        m = m & (kpos > qpos - window)
+    return m
+
+
+@functools.lru_cache(maxsize=None)
+def _make_flash(causal: bool, window, scale: float, bq: int, bk: int,
+                q_offset: int):
+    """Build a custom-vjp flash attention for fixed static settings."""
+
+    def _sdot(a, b):
+        # batched matmul that broadcasts the G=1 kv dim against q's G dim
+        return jnp.einsum("...qd,...kd->...qk", a, b,
+                          preferred_element_type=jnp.float32)
+
+    def _fwd_blocks(q5, k, v):
+        b, kh, g, lq, d = q5.shape
+        s_len = k.shape[2]
+        nq, nk = lq // bq, s_len // bk
+        k5 = k[:, :, None]  # (B, K, 1, S, d)
+        v5 = v[:, :, None]
+
+        def per_qblock(qi):
+            qblk = lax.dynamic_slice_in_dim(q5, qi * bq, bq, 3)
+
+            def kv_step(carry, kj):
+                acc, m_run, l_run = carry
+                kblk = lax.dynamic_slice_in_dim(k5, kj * bk, bk, 3)
+                vblk = lax.dynamic_slice_in_dim(v5, kj * bk, bk, 3)
+                s = _sdot(qblk, kblk) * scale  # (B,K,G,bq,bk) f32
+                mask = _block_mask(qi, kj, bq, bk, q_offset, causal, window)
+                s = jnp.where(mask, s, _NEG)
+                m_new = jnp.maximum(m_run, s.max(-1))
+                p = jnp.exp(s - m_new[..., None])
+                alpha = jnp.exp(m_run - m_new)
+                l_new = l_run * alpha + p.sum(-1)
+                acc = acc * alpha[..., None] + jnp.einsum(
+                    "...qk,...kd->...qd", p, vblk.astype(jnp.float32))
+                return (acc, m_new, l_new), None
+
+            acc0 = jnp.zeros((b, kh, g, bq, d), jnp.float32)
+            m0 = jnp.full((b, kh, g, bq), _NEG, jnp.float32)
+            l0 = jnp.zeros((b, kh, g, bq), jnp.float32)
+            (acc, m_run, l_run), _ = lax.scan(
+                kv_step, (acc0, m0, l0), jnp.arange(nk))
+            l_safe = jnp.maximum(l_run, 1e-37)
+            o = acc / l_safe[..., None]
+            lse = m_run + jnp.log(l_safe)
+            return o.astype(q5.dtype), lse
+
+        o, lse = lax.map(per_qblock, jnp.arange(nq))
+        # o: (nq, B, K, G, bq, d) -> (B, K, G, Lq, d)
+        o = jnp.moveaxis(o, 0, 3).reshape(b, kh, g, lq, d)
+        lse = jnp.moveaxis(lse, 0, 3).reshape(b, kh, g, lq)
+        return o, lse
+
+    @jax.custom_vjp
+    def flash(q5, k, v):
+        return _fwd_blocks(q5, k, v)[0]
+
+    def fwd(q5, k, v):
+        o, lse = _fwd_blocks(q5, k, v)
+        return o, (q5, k, v, o, lse)
+
+    def bwd(res, do):
+        q5, k, v, o, lse = res
+        b, kh, g, lq, d = q5.shape
+        s_len = k.shape[2]
+        nq, nk = lq // bq, s_len // bk
+        k5 = k[:, :, None]
+        v5 = v[:, :, None]
+        do_f = do.astype(jnp.float32)
+        delta = jnp.sum(do_f * o.astype(jnp.float32), axis=-1)  # (B,K,G,Lq)
+
+        def dq_block(qi):
+            qblk = lax.dynamic_slice_in_dim(q5, qi * bq, bq, 3)
+            doblk = lax.dynamic_slice_in_dim(do_f, qi * bq, bq, 3)
+            lseblk = lax.dynamic_slice_in_dim(lse, qi * bq, bq, 3)
+            dblk = lax.dynamic_slice_in_dim(delta, qi * bq, bq, 3)
+
+            def kv_step(dq_acc, kj):
+                kblk = lax.dynamic_slice_in_dim(k5, kj * bk, bk, 3)
+                vblk = lax.dynamic_slice_in_dim(v5, kj * bk, bk, 3)
+                s = _sdot(qblk, kblk) * scale
+                mask = _block_mask(qi, kj, bq, bk, q_offset, causal, window)
+                s = jnp.where(mask, s, _NEG)
+                p = jnp.exp(s - lseblk[..., None])
+                dp = jnp.einsum("...qd,...kd->...qk", doblk,
+                                vblk.astype(jnp.float32))
+                ds = p * (dp - dblk[..., None])
+                dq_acc = dq_acc + scale * jnp.einsum(
+                    "...qk,...kd->...qd", ds, kblk.astype(jnp.float32))
+                return dq_acc, None
+
+            dq0 = jnp.zeros((b, kh, g, bq, d), jnp.float32)
+            dq_acc, _ = lax.scan(kv_step, dq0, jnp.arange(nk))
+            return dq_acc
+
+        dq = lax.map(dq_block, jnp.arange(nq))
+        dq = jnp.moveaxis(dq, 0, 3).reshape(b, kh, g, lq, d).astype(q5.dtype)
+
+        def dkv_block(kj):
+            kblk = lax.dynamic_slice_in_dim(k5, kj * bk, bk, 3)
+            vblk = lax.dynamic_slice_in_dim(v5, kj * bk, bk, 3)
+
+            def q_step(carry, qi):
+                dk_acc, dv_acc = carry
+                qblk = lax.dynamic_slice_in_dim(q5, qi * bq, bq, 3)
+                doblk = lax.dynamic_slice_in_dim(do_f, qi * bq, bq, 3)
+                lseblk = lax.dynamic_slice_in_dim(lse, qi * bq, bq, 3)
+                dblk = lax.dynamic_slice_in_dim(delta, qi * bq, bq, 3)
+                s = _sdot(qblk, kblk) * scale
+                mask = _block_mask(qi, kj, bq, bk, q_offset, causal, window)
+                s = jnp.where(mask, s, _NEG)
+                p = jnp.exp(s - lseblk[..., None])
+                dv_acc = dv_acc + jnp.einsum("...qk,...qd->...kd", p, doblk)
+                dp = jnp.einsum("...qd,...kd->...qk", doblk,
+                                vblk.astype(jnp.float32))
+                ds = p * (dp - dblk[..., None])
+                dk_acc = dk_acc + scale * jnp.einsum(
+                    "...qk,...qd->...kd", ds, qblk.astype(jnp.float32))
+                return (dk_acc, dv_acc), None
+
+            z = jnp.zeros((b, kh, g, bk, d), jnp.float32)
+            (dk_acc, dv_acc), _ = lax.scan(q_step, (z, z), jnp.arange(nq))
+            # sum over the q-group axis G -> kv gradient
+            return dk_acc.sum(axis=2), dv_acc.sum(axis=2)
+
+        dk, dv = lax.map(dkv_block, jnp.arange(nk))
+        dk = jnp.moveaxis(dk, 0, 2).reshape(b, kh, s_len, d).astype(k.dtype)
+        dv = jnp.moveaxis(dv, 0, 2).reshape(b, kh, s_len, d).astype(v.dtype)
+        return dq, dk, dv
+
+    flash.defvjp(fwd, bwd)
+    return flash
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: int | None = None, scale: float | None = None,
+                    q_block: int = 512, kv_block: int = 512,
+                    q_offset: int = 0):
+    """Blocked attention. q: (B,H,Lq,d), k/v: (B,K,S,d), H = K*G."""
+    b, h, lq, d = q.shape
+    kh = k.shape[1]
+    assert h % kh == 0, (h, kh)
+    g = h // kh
+
+    def _divisor(n: int, target: int) -> int:
+        for cand in range(min(target, n), 0, -1):
+            if n % cand == 0:
+                return cand
+        return 1
+
+    bq = _divisor(lq, q_block)
+    bk = _divisor(k.shape[2], kv_block)
+    if scale is None:
+        scale = d ** -0.5
+    fn = _make_flash(causal, window, float(scale), bq, bk, int(q_offset))
+    q5 = q.reshape(b, kh, g, lq, d)
+    o = fn(q5, k, v)
+    return o.reshape(b, h, lq, d)
+
+
+def reference_attention(q, k, v, *, causal: bool = True,
+                        window: int | None = None,
+                        scale: float | None = None, q_offset: int = 0):
+    """Naive O(L^2) oracle for tests."""
+    b, h, lq, d = q.shape
+    kh = k.shape[1]
+    g = h // kh
+    s_len = k.shape[2]
+    if scale is None:
+        scale = d ** -0.5
+    q5 = q.reshape(b, kh, g, lq, d)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", q5.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = q_offset + jnp.arange(lq)[:, None]
+    kpos = jnp.arange(s_len)[None, :]
+    m = jnp.ones((lq, s_len), bool)
+    if causal:
+        m = m & (kpos <= qpos)
+    if window is not None:
+        m = m & (kpos > qpos - window)
+    s = jnp.where(m, s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, lq, d).astype(q.dtype)

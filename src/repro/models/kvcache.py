@@ -1,0 +1,97 @@
+"""KV / SSM caches for decode.
+
+Cache layout per sub-layer kind (stacked over superblocks for lax.scan):
+  "A" full attention : {"k","v"}: (B, C, K, hd) with C = cache_len
+  "S" sliding window : same with C = window (ring buffer, slot = pos % C)
+  "M" mamba          : {"ssm": (B,H,N,P) f32, "conv": (B, W-1, conv_ch)}
+  "X" cross-attn     : {"k","v"}: (B, T_enc, K, hd) — static after prefill
+
+Slot-position bookkeeping is derived from the scalar `pos` (see slot_positions),
+so no per-slot metadata is stored.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+
+
+def effective_mixer(cfg: ModelConfig, mixer: str, long_mode: bool) -> tuple[str, int | None]:
+    """Resolve (kind, window) given the long-context variant flag."""
+    if mixer == "A":
+        if long_mode and cfg.long_context_window:
+            return "S", cfg.long_context_window
+        return "A", None
+    if mixer == "S":
+        return "S", cfg.sliding_window
+    return mixer, None
+
+
+def slot_positions(pos: jax.Array, c: int) -> jax.Array:
+    """Absolute position held by each of C ring slots given current pos.
+
+    Slot i holds the latest q < pos with q % C == i; -1 if never written.
+    """
+    i = jnp.arange(c, dtype=jnp.int32)
+    q = pos.astype(jnp.int32) - 1 - ((pos.astype(jnp.int32) - 1 - i) % c)
+    return jnp.where(q >= 0, q, -1)
+
+
+def _attn_cache(cfg: ModelConfig, b: int, c: int, dtype) -> dict:
+    kh, hd = cfg.num_kv_heads, cfg.head_dim
+    return {"k": jnp.zeros((b, c, kh, hd), dtype),
+            "v": jnp.zeros((b, c, kh, hd), dtype)}
+
+
+def _mamba_cache(cfg: ModelConfig, b: int, dtype) -> dict:
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state_dim
+    return {"ssm": jnp.zeros((b, cfg.ssm_heads, cfg.ssm_state_dim,
+                              cfg.ssm_head_dim), jnp.float32),
+            "conv": jnp.zeros((b, cfg.ssm_conv_width - 1, conv_ch), dtype)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               long_mode: bool = False):
+    """Zeroed cache pytree, leaves stacked over superblocks (leading S axis)."""
+    dtype = cfg.jnp_dtype
+    plan = cfg.block_plan()
+
+    def one_sublayer(mixer):
+        kind, window = effective_mixer(cfg, mixer, long_mode)
+        if kind == "A":
+            return _attn_cache(cfg, batch, cache_len, dtype)
+        if kind == "S":
+            return _attn_cache(cfg, batch, min(window, cache_len), dtype)
+        if kind == "M":
+            return _mamba_cache(cfg, batch, dtype)
+        if kind == "X":
+            return _attn_cache(cfg, batch, max(cfg.num_frontend_tokens, 1),
+                               dtype)
+        raise ValueError(kind)
+
+    block_cache = {f"l{i}": one_sublayer(mx) for i, (mx, _) in enumerate(plan)}
+    s = cfg.num_superblocks
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (s,) + x.shape).copy(), block_cache)
+
+
+def write_kv(cache: dict, k_new: jax.Array, v_new: jax.Array,
+             pos: jax.Array) -> dict:
+    """Write one token's k/v (B, 1, K, hd) at ring slot pos % C."""
+    c = cache["k"].shape[1]
+    slot = (pos % c).astype(jnp.int32)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
+    return {"k": k, "v": v}
+
+
+def fill_from_prefill(cfg: ModelConfig, k: jax.Array, v: jax.Array,
+                      c: int) -> dict:
+    """Arrange prefill k/v (B, L, K, hd) into a C-slot ring cache."""
+    l = k.shape[1]
+    i = jnp.arange(c, dtype=jnp.int32)
+    src = l - 1 - ((l - 1 - i) % c)          # latest pos per slot
+    src_c = jnp.clip(src, 0, l - 1)
+    return {"k": jnp.take(k, src_c, axis=1),
+            "v": jnp.take(v, src_c, axis=1)}

@@ -1,0 +1,231 @@
+"""Transformer building blocks: norms, RoPE, GQA attention, MLPs.
+
+Pure functional style: ``init_*`` builds a param dict, ``apply``-style
+functions consume it. Everything is dtype-disciplined (params/activations in
+cfg dtype, softmax/norm statistics in f32).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import tuning
+from .flash import flash_attention
+
+_NEG = -1e30
+
+
+# ------------------------------------------------------------------ norms
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ------------------------------------------------------------------- RoPE
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., L, H, d); positions: (L,) or broadcastable to x[...,:, 0, 0]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (L, half)
+    cos = jnp.cos(ang)[..., None, :]  # (L, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin,
+                           xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- attention
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> dict:
+    d, h, kh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = cfg.jnp_dtype
+    ks = jax.random.split(key, 4)
+    std = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, h * hd)) * std).astype(dt),
+        "wk": (jax.random.normal(ks[1], (d, kh * hd)) * std).astype(dt),
+        "wv": (jax.random.normal(ks[2], (d, kh * hd)) * std).astype(dt),
+        "wo": (jax.random.normal(ks[3], (h * hd, d))
+               * (h * hd) ** -0.5).astype(dt),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = init_rmsnorm(hd, dt)
+        p["k_norm"] = init_rmsnorm(hd, dt)
+    return p
+
+
+def _project_qkv(p, cfg: ModelConfig, x, kv_src):
+    b, l, _ = x.shape
+    h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, l, h, hd)
+    k = (kv_src @ p["wk"]).reshape(b, kv_src.shape[1], kh, hd)
+    v = (kv_src @ p["wv"]).reshape(b, kv_src.shape[1], kh, hd)
+    if "q_norm" in p:
+        q = rmsnorm(p["q_norm"], q, cfg.rmsnorm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.rmsnorm_eps)
+    return q, k, v
+
+
+def attention(p: dict, cfg: ModelConfig, x: jax.Array,
+              positions: jax.Array, *, window: Optional[int] = None,
+              q_block: int = 512, kv_block: int = 512) -> jax.Array:
+    """Causal self-attention over x: (B, L, D). positions: (L,)."""
+    b, l, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, x)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    # (B, H, L, d)
+    q = q.transpose(0, 2, 1, 3)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    if tuning.enabled("attn_kv_replicate"):
+        # q heads TP-sharded, kv heads replicated over model -> the flash kv
+        # scan body is collective-free (§Perf hillclimb #2)
+        def _q_spec(mesh):
+            from jax.sharding import PartitionSpec as P
+            dp = tuning.dp_axes_of(mesh)
+            if "model" in mesh.axis_names and \
+                    q.shape[1] % mesh.shape["model"] == 0:
+                return P(dp, "model", None, None)
+            return None
+
+        def _kv_spec(mesh):
+            from jax.sharding import PartitionSpec as P
+            dp = tuning.dp_axes_of(mesh)
+            return P(dp, None, None, None)
+
+        q = tuning.constrain(q, _q_spec)
+        k = tuning.constrain(k, _kv_spec)
+        v = tuning.constrain(v, _kv_spec)
+    o = flash_attention(q, k, v, causal=True, window=window,
+                        q_block=q_block, kv_block=kv_block)
+    o = o.transpose(0, 2, 1, 3).reshape(b, l, -1)
+    return o @ p["wo"]
+
+
+def cross_attention(p: dict, cfg: ModelConfig, x: jax.Array,
+                    enc: jax.Array, q_block: int = 512,
+                    kv_block: int = 512) -> jax.Array:
+    """x: (B, L, D) queries; enc: (B, T, D) encoder states (projected)."""
+    b, l, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, enc)
+    q = q.transpose(0, 2, 1, 3)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    o = flash_attention(q, k, v, causal=False, q_block=q_block,
+                        kv_block=kv_block)
+    o = o.transpose(0, 2, 1, 3).reshape(b, l, -1)
+    return o @ p["wo"]
+
+
+def decode_attention(p: dict, cfg: ModelConfig, x: jax.Array,
+                     k_cache: jax.Array, v_cache: jax.Array,
+                     cache_pos: jax.Array, pos: jax.Array) -> jax.Array:
+    """Single-token decode: x (B, 1, D) against a populated cache.
+
+    k_cache/v_cache: (B, C, K, hd) — already contain the NEW token's k/v.
+    cache_pos: (C,) absolute positions of each slot (-1 for empty).
+    pos: () current absolute position.
+    """
+    b = x.shape[0]
+    h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // kh
+    q = (x @ p["wq"]).reshape(b, 1, h, hd)
+    if "q_norm" in p:
+        q = rmsnorm(p["q_norm"], q, cfg.rmsnorm_eps)
+    q = rope(q, pos[None].astype(jnp.int32), cfg.rope_theta)
+    q5 = q.reshape(b, 1, kh, g, hd).transpose(0, 2, 3, 1, 4)  # (B,K,G,1,hd)
+    kt = k_cache.transpose(0, 2, 1, 3)[:, :, None]   # (B,K,1,C,hd)
+    vt = v_cache.transpose(0, 2, 1, 3)[:, :, None]
+    s = jnp.einsum("bkgqd,bkgcd->bkgqc", q5.astype(jnp.float32),
+                   kt.astype(jnp.float32)) * hd ** -0.5
+    valid = (cache_pos >= 0) & (cache_pos <= pos)
+    s = jnp.where(valid[None, None, None, None, :], s, _NEG)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqc,bkgcd->bkgqd", pr, vt.astype(jnp.float32))
+    o = o.transpose(0, 3, 1, 2, 4).reshape(b, 1, h * hd).astype(x.dtype)
+    return o @ p["wo"]
+
+
+def decode_cross_attention(p: dict, cfg: ModelConfig, x: jax.Array,
+                           k_cache: jax.Array, v_cache: jax.Array) -> jax.Array:
+    """Decode-time cross-attention over static (encoder) KV: (B, T, K, hd)."""
+    b = x.shape[0]
+    h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // kh
+    q = (x @ p["wq"]).reshape(b, 1, h, hd)
+    q5 = q.reshape(b, 1, kh, g, hd).transpose(0, 2, 3, 1, 4)
+    kt = k_cache.transpose(0, 2, 1, 3)[:, :, None]
+    vt = v_cache.transpose(0, 2, 1, 3)[:, :, None]
+    s = jnp.einsum("bkgqd,bkgcd->bkgqc", q5.astype(jnp.float32),
+                   kt.astype(jnp.float32)) * hd ** -0.5
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqc,bkgcd->bkgqd", pr, vt.astype(jnp.float32))
+    o = o.transpose(0, 3, 1, 2, 4).reshape(b, 1, h * hd).astype(x.dtype)
+    return o @ p["wo"]
+
+
+def compute_kv(p: dict, cfg: ModelConfig, x: jax.Array,
+               positions: Optional[jax.Array]) -> tuple[jax.Array, jax.Array]:
+    """k, v for cache fill: (B, L, K, hd); RoPE applied iff positions given."""
+    b, l, _ = x.shape
+    kh, hd = cfg.num_kv_heads, cfg.head_dim
+    k = (x @ p["wk"]).reshape(b, l, kh, hd)
+    v = (x @ p["wv"]).reshape(b, l, kh, hd)
+    if "k_norm" in p:
+        k = rmsnorm(p["k_norm"], k, cfg.rmsnorm_eps)
+    if positions is not None:
+        k = rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+# -------------------------------------------------------------------- MLP
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = cfg.jnp_dtype
+    ks = jax.random.split(key, 3)
+    std_in, std_out = d ** -0.5, f ** -0.5
+    if cfg.activation == "swiglu":
+        return {
+            "wi": (jax.random.normal(ks[0], (d, f)) * std_in).astype(dt),
+            "wg": (jax.random.normal(ks[1], (d, f)) * std_in).astype(dt),
+            "wo": (jax.random.normal(ks[2], (f, d)) * std_out).astype(dt),
+        }
+    return {
+        "wi": (jax.random.normal(ks[0], (d, f)) * std_in).astype(dt),
+        "wo": (jax.random.normal(ks[2], (f, d)) * std_out).astype(dt),
+    }
+
+
+def mlp(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    elif cfg.activation == "squared_relu":
+        h = jnp.square(jax.nn.relu(x @ p["wi"]))
+    elif cfg.activation == "gelu":
+        h = jax.nn.gelu(x @ p["wi"])
+    else:
+        raise ValueError(cfg.activation)
+    if tuning.enabled("mlp_hidden_shard"):
+        # pin the hidden to TP sharding — propagation around remat sometimes
+        # replicates it and ARs full-width gradients (§Perf P2b)
+        def _spec(mesh):
+            from jax.sharding import PartitionSpec as P
+            if "model" in mesh.axis_names and \
+                    h.shape[-1] % mesh.shape["model"] == 0:
+                return P(tuning.dp_axes_of(mesh), None, "model")
+            return None
+        h = tuning.constrain(h, _spec)
+    return h @ p["wo"]

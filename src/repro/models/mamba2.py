@@ -1,0 +1,195 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) mixer.
+
+TPU adaptation notes (DESIGN.md §3): the CUDA reference uses a fused
+selective-scan kernel; here we implement the *chunked dual form*, which maps
+the recurrence onto MXU-friendly matmuls: within-chunk attention-like
+(Q x Q) blocks + an inter-chunk lax.scan over running states. Chunk length
+is a config knob (`ssm_chunk`) chosen so the (Q, Q, H) score block fits VMEM
+budgets on real hardware.
+
+Single-group (G=1) B/C projections, per-head decay (standard Mamba-2).
+Decode is the O(1) recurrent step with (state, conv) caches.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+
+
+def init_mamba(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner
+    n = cfg.ssm_state_dim
+    h = cfg.ssm_heads
+    w = cfg.ssm_conv_width
+    dt = cfg.jnp_dtype
+    conv_ch = di + 2 * n                     # x, B, C share the causal conv
+    ks = jax.random.split(key, 6)
+    std = d ** -0.5
+    return {
+        # SPLIT input projections (z / xBC / dt): math-identical to the
+        # reference fused w_in, but each output is independently TP-sharded;
+        # the fused layout slices at shard-misaligned offsets and XLA
+        # re-gathers the full activation per layer (§Perf P3a).
+        "w_z": (jax.random.normal(ks[0], (d, di)) * std).astype(dt),
+        "w_xbc": (jax.random.normal(ks[4], (d, conv_ch)) * std).astype(dt),
+        "w_dt": (jax.random.normal(ks[5], (d, h)) * std).astype(dt),
+        "conv_w": (jax.random.normal(ks[1], (w, conv_ch)) * w ** -0.5
+                   ).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "a_log": jnp.zeros((h,), jnp.float32),       # A = -exp(a_log) = -1
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": {"scale": jnp.ones((di,), dt)},      # gated RMSNorm
+        "w_out": (jax.random.normal(ks[3], (di, d)) * di ** -0.5).astype(dt),
+    }
+
+
+def _split_proj(p, cfg: ModelConfig, x):
+    """Three shard-aligned projections (see init_mamba note)."""
+    return x @ p["w_z"], x @ p["w_xbc"], x @ p["w_dt"]
+
+
+def _causal_conv(p, x):
+    """Depthwise causal conv over (B, L, C) with kernel (W, C)."""
+    w = p["conv_w"].shape[0]
+    xp = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * p["conv_w"][i][None, None, :]
+              for i in range(w))
+    return out + p["conv_b"]
+
+
+def _gated_rmsnorm(p, y, z, eps):
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    out = yf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return out.astype(y.dtype)
+
+
+def ssd_chunked(x, dt, a_neg, b_proj, c_proj, chunk: int):
+    """Chunked SSD scan.
+
+    x:  (B, L, H, P) inputs per head
+    dt: (B, L, H)    positive step sizes
+    a_neg: (H,)      negative per-head decay rate A
+    b_proj, c_proj: (B, L, N)  shared across heads (G=1)
+    Returns y: (B, L, H, P) and final state (B, H, N, P).
+    """
+    bsz, l_orig, h, p_dim = x.shape
+    n = b_proj.shape[-1]
+    q = min(chunk, l_orig)
+    pad = (-l_orig) % q
+    if pad:
+        # zero-pad to a chunk multiple; dt=0 rows carry no state and their
+        # outputs are sliced off below
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_proj = jnp.pad(b_proj, ((0, 0), (0, pad), (0, 0)))
+        c_proj = jnp.pad(c_proj, ((0, 0), (0, pad), (0, 0)))
+    l = l_orig + pad
+    nc = l // q
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    la = dtf * a_neg[None, None, :]                        # log decay (B,L,H)
+
+    def ck(t, shape_tail):  # reshape (B, L, ...) -> (B, nc, q, ...)
+        return t.reshape((bsz, nc, q) + shape_tail)
+
+    x_c = ck(xf, (h, p_dim))
+    dt_c = ck(dtf, (h,))
+    la_c = ck(la, (h,))
+    b_c = ck(b_proj.astype(jnp.float32), (n,))
+    c_c = ck(c_proj.astype(jnp.float32), (n,))
+
+    lcum = jnp.cumsum(la_c, axis=2)                        # (B,nc,q,H)
+    seg_total = lcum[:, :, -1, :]                          # (B,nc,H)
+
+    # ---- within-chunk (attention-like) term
+    scores = jnp.einsum("bcqn,bckn->bcqk", c_c, b_c)       # (B,nc,q,q)
+    decay = jnp.exp(lcum[:, :, :, None, :] - lcum[:, :, None, :, :])
+    causal = jnp.tril(jnp.ones((q, q), jnp.float32))
+    m = scores[..., None] * decay * causal[None, None, :, :, None]
+    y_diag = jnp.einsum("bcqkh,bckh,bckhp->bcqhp", m, dt_c, x_c)
+
+    # ---- per-chunk end states
+    w_state = jnp.exp(seg_total[:, :, None, :] - lcum) * dt_c  # (B,nc,q,H)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchnp", b_c, w_state, x_c)
+
+    # ---- inter-chunk recurrence over nc
+    chunk_decay = jnp.exp(seg_total)                       # (B,nc,H)
+
+    def step(s_prev, inp):
+        st, dec = inp                                      # (B,H,N,P), (B,H)
+        s_out = s_prev                                     # state BEFORE chunk
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_out
+
+    states_t = jnp.moveaxis(states, 1, 0)                  # (nc,B,H,N,P)
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)              # (nc,B,H)
+    s0 = jnp.zeros((bsz, h, n, p_dim), jnp.float32)
+    s_final, s_prior = jax.lax.scan(step, s0, (states_t, decay_t))
+    s_prior = jnp.moveaxis(s_prior, 0, 1)                  # (B,nc,H,N,P)
+
+    # ---- off-chunk contribution
+    y_off = jnp.einsum("bcqn,bcqh,bchnp->bcqhp",
+                       c_c, jnp.exp(lcum), s_prior)
+    y = (y_diag + y_off).reshape(bsz, l, h, p_dim)
+    return y[:, :l_orig], s_final
+
+
+def mamba_forward(p: dict, cfg: ModelConfig, x: jax.Array
+                  ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Full-sequence forward. x: (B, L, D). Returns (y, (ssm_state, conv_tail))."""
+    bsz, l, _ = x.shape
+    di, n, h, pd = cfg.d_inner, cfg.ssm_state_dim, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc, dtr = _split_proj(p, cfg, x)
+    xbc_pre = xbc                                           # pre-conv (for cache)
+    xbc = jax.nn.silu(_causal_conv(p, xbc))
+    xs = xbc[..., :di].reshape(bsz, l, h, pd)
+    b_proj = xbc[..., di:di + n]
+    c_proj = xbc[..., di + n:]
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])
+    a_neg = -jnp.exp(p["a_log"])
+    y, state = ssd_chunked(xs, dt, a_neg, b_proj, c_proj, cfg.ssm_chunk)
+    y = y + xs.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, l, di).astype(x.dtype)
+    out = _gated_rmsnorm(p["norm"], y, z, cfg.rmsnorm_eps) @ p["w_out"]
+    w = cfg.ssm_conv_width
+    conv_tail = xbc_pre[:, l - (w - 1):, :]                # (B, W-1, conv_ch)
+    return out, (state.astype(jnp.float32), conv_tail)
+
+
+def mamba_decode_step(p: dict, cfg: ModelConfig, x: jax.Array,
+                      ssm_state: jax.Array, conv_state: jax.Array
+                      ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """O(1) recurrent decode. x: (B, 1, D).
+
+    ssm_state: (B, H, N, P) f32; conv_state: (B, W-1, conv_ch) — the last
+    W-1 *pre-conv* xBC rows.
+    """
+    bsz = x.shape[0]
+    di, n, h, pd = cfg.d_inner, cfg.ssm_state_dim, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc_new, dtr = _split_proj(p, cfg, x)               # (B,1,*)
+    window = jnp.concatenate([conv_state, xbc_new], axis=1)  # (B,W,conv_ch)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xbc = jax.nn.silu(conv_out)                            # (B, conv_ch)
+    xs = xbc[..., :di].reshape(bsz, h, pd)
+    b_proj = xbc[..., di:di + n]                           # (B,N)
+    c_proj = xbc[..., di + n:]
+    dt = jax.nn.softplus(dtr[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = jnp.exp(dt * (-jnp.exp(p["a_log"]))[None, :])      # (B,H)
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dt, b_proj.astype(jnp.float32),
+                     xs.astype(jnp.float32))
+    new_state = ssm_state * a[..., None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", c_proj.astype(jnp.float32), new_state)
+    y = y + xs.astype(jnp.float32) * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+    out = _gated_rmsnorm(p["norm"], y, z, cfg.rmsnorm_eps) @ p["w_out"]
+    new_conv = window[:, 1:, :]
+    return out, (new_state, new_conv)

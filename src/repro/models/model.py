@@ -1,0 +1,377 @@
+"""LM composition: embeddings -> pattern-driven blocks -> head.
+
+Three entry points, matching the input shapes:
+  * train_loss / train forward  — full sequence, flash attention, chunked CE
+  * prefill                     — full sequence, returns (last_logits, cache)
+  * serve_step                  — one token against a cache (decode shapes)
+
+Layers are scanned over superblocks (cfg.scan_period sub-layers per scan
+step) with optional remat, keeping HLO size O(period) instead of O(layers).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import kvcache, layers, mamba2, moe, tuning
+from .kvcache import effective_mixer
+
+
+# --------------------------------------------------------------- utilities
+def _pick_block(l: int, target: int) -> int:
+    for b in range(min(target, l), 0, -1):
+        if l % b == 0:
+            return b
+    return 1
+
+
+def _constrain(x, spec):
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ------------------------------------------------------------------- init
+def _init_layer(key, cfg: ModelConfig, mixer: str, is_moe: bool) -> dict:
+    dt = cfg.jnp_dtype
+    k1, k2 = jax.random.split(key)
+    p = {"norm1": layers.init_rmsnorm(cfg.d_model, dt),
+         "norm2": layers.init_rmsnorm(cfg.d_model, dt)}
+    if mixer in ("A", "S"):
+        p["mixer"] = layers.init_attention(k1, cfg)
+    elif mixer == "X":
+        p["mixer"] = layers.init_attention(k1, cfg, cross=True)
+    elif mixer == "M":
+        p["mixer"] = mamba2.init_mamba(k1, cfg)
+    else:
+        raise ValueError(mixer)
+    if is_moe:
+        p["ffn"] = moe.init_moe(k2, cfg)
+    elif cfg.d_ff > 0:
+        p["ffn"] = layers.init_mlp(k2, cfg)
+    else:
+        del p["norm2"]  # pure-mixer block (e.g. mamba2 has no MLP)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    plan = cfg.block_plan()
+    s = cfg.num_superblocks
+    keys = jax.random.split(key, s + 3)
+    dt = cfg.jnp_dtype
+    emb = (jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model))
+           * cfg.d_model ** -0.5).astype(dt)
+    params: dict[str, Any] = {
+        "embed": emb,
+        "final_norm": layers.init_rmsnorm(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(
+            keys[1], (cfg.d_model, cfg.vocab_size)) * cfg.d_model ** -0.5
+        ).astype(dt)
+    if cfg.frontend:
+        params["frontend_proj"] = (jax.random.normal(
+            keys[2], (cfg.d_frontend, cfg.d_model))
+            * cfg.d_frontend ** -0.5).astype(dt)
+
+    def one_superblock(k):
+        ks = jax.random.split(k, len(plan))
+        return {f"l{i}": _init_layer(ks[i], cfg, mx, mo)
+                for i, (mx, mo) in enumerate(plan)}
+
+    blocks = [one_superblock(keys[3 + i]) for i in range(s)]
+    params["blocks"] = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *blocks) if s > 1 else \
+        jax.tree_util.tree_map(lambda x: x[None], blocks[0])
+    return params
+
+
+def param_count(cfg: ModelConfig) -> int:
+    import math
+    shapes = jax.eval_shape(functools.partial(init_params, cfg=cfg),
+                            jax.random.PRNGKey(0))
+    return sum(math.prod(x.shape)
+               for x in jax.tree_util.tree_leaves(shapes))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Params touched per token (MoE: top-k of experts)."""
+    total = param_count(cfg)
+    if not cfg.num_experts:
+        return total
+    # subtract inactive expert weights
+    plan = cfg.layer_plan()
+    n_moe = sum(1 for _, mo in plan if mo)
+    per_expert = cfg.d_model * cfg.d_ff_expert * (
+        3 if cfg.activation == "swiglu" else 2)
+    inactive = n_moe * (cfg.num_experts - cfg.num_experts_per_tok) * per_expert
+    return total - inactive
+
+
+# ---------------------------------------------------------------- forward
+def _apply_layer(lp: dict, cfg: ModelConfig, x, positions, enc, spec,
+                 long_mode: bool, moe_mode: str):
+    mixer, is_moe = spec
+    kind, window = effective_mixer(cfg, mixer, long_mode)
+    h = layers.rmsnorm(lp["norm1"], x, cfg.rmsnorm_eps)
+    l = x.shape[1]
+    qb = _pick_block(l, 512)
+    if kind in ("A", "S"):
+        mo = layers.attention(lp["mixer"], cfg, h, positions, window=window,
+                              q_block=qb, kv_block=qb)
+    elif kind == "X":
+        mo = layers.cross_attention(lp["mixer"], cfg, h, enc, q_block=qb,
+                                    kv_block=_pick_block(enc.shape[1], 512))
+    elif kind == "M":
+        mo, _ = mamba2.mamba_forward(lp["mixer"], cfg, h)
+    else:
+        raise ValueError(kind)
+    x = x + mo
+    if "ffn" not in lp:
+        return x, jnp.zeros((), jnp.float32)
+    h2 = layers.rmsnorm(lp["norm2"], x, cfg.rmsnorm_eps)
+    if is_moe:
+        f, aux = moe.moe_apply(lp["ffn"], cfg, h2, mode=moe_mode)
+    else:
+        f, aux = layers.mlp(lp["ffn"], cfg, h2), jnp.zeros((), jnp.float32)
+    return x + f, aux
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: jax.Array,
+            enc_embeddings: Optional[jax.Array] = None, *,
+            long_mode: bool = False, moe_mode: str = "scan",
+            remat: str = "full", act_spec=None) -> jax.Array:
+    """Returns final hidden states (B, L_total, D).
+
+    audio frontends prepend projected frame embeddings as a prefix; vlm
+    frontends feed cross-attention layers.
+    """
+    x = jnp.take(params["embed"], tokens, axis=0)
+    enc = None
+    if cfg.frontend:
+        enc = enc_embeddings @ params["frontend_proj"]
+        if cfg.frontend == "audio":
+            x = jnp.concatenate([enc.astype(x.dtype), x], axis=1)
+            enc = None
+    x = _constrain(x, act_spec)
+    l_total = x.shape[1]
+    positions = jnp.arange(l_total, dtype=jnp.int32)
+    plan = cfg.block_plan()
+
+    def superblock(carry, block_params):
+        h, aux = carry
+        h = _constrain(h, act_spec)
+        if tuning.enabled("seq_parallel"):
+            # Megatron-style sequence parallelism: residuals live L-sharded
+            # over the model axis between blocks, turning per-layer dgrad
+            # all-reduces into reduce-scatter+all-gather (§Perf P2c/P3c)
+            def _sp(mesh):
+                from jax.sharding import PartitionSpec as P
+                if "model" in mesh.axis_names and \
+                        h.shape[1] % mesh.shape["model"] == 0:
+                    return P(tuning.dp_axes_of(mesh), "model", None)
+                return None
+            h = tuning.constrain(h, _sp)
+        for i, spec in enumerate(plan):
+            h, a = _apply_layer(block_params[f"l{i}"], cfg, h, positions,
+                                enc, spec, long_mode, moe_mode)
+            aux = aux + a
+        return (h, aux), None
+
+    if remat == "full":
+        superblock = jax.checkpoint(
+            superblock, policy=jax.checkpoint_policies.nothing_saveable)
+    elif remat == "dots":
+        superblock = jax.checkpoint(
+            superblock,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    (x, aux), _ = jax.lax.scan(superblock, (x, jnp.zeros((), jnp.float32)),
+                               params["blocks"])
+    x = layers.rmsnorm(params["final_norm"], x, cfg.rmsnorm_eps)
+    return x, aux
+
+
+def _lm_head(params: dict, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def chunked_xent(x: jax.Array, w_head: jax.Array, labels: jax.Array,
+                 chunk: int = 256) -> jax.Array:
+    """Mean cross-entropy without materializing (B, L, V) logits."""
+    b, l, d = x.shape
+    ck = _pick_block(l, chunk)
+    nc = l // ck
+    xc = x.reshape(b, nc, ck, d).transpose(1, 0, 2, 3)       # (nc,B,ck,D)
+    yc = labels.reshape(b, nc, ck).transpose(1, 0, 2)
+
+    if tuning.enabled("xent_fused"):
+        def _wspec(mesh):
+            from jax.sharding import PartitionSpec as P
+            if "model" in mesh.axis_names and \
+                    w_head.shape[-1] % mesh.shape["model"] != 0:
+                # tied head with non-divisible vocab: replicate the head
+                # (one 150 MB gather) instead of AR-ing every full-logit
+                # chunk (GBs per chunk; §Perf P2c/P3b)
+                return P(None, None)
+            return None
+        w_head = tuning.constrain(w_head, _wspec)
+
+    @jax.checkpoint
+    def body(tot, xy):
+        xb, yb = xy
+        if tuning.enabled("xent_fused"):
+            def _xspec(mesh):
+                from jax.sharding import PartitionSpec as P
+                return P(tuning.dp_axes_of(mesh), None, None)
+            xb = tuning.constrain(xb, _xspec)
+        logits = (xb @ w_head).astype(jnp.float32)           # (B,ck,V)
+        if tuning.enabled("xent_fused"):
+            def _spec(mesh):
+                from jax.sharding import PartitionSpec as P
+                dp = tuning.dp_axes_of(mesh)
+                if "model" in mesh.axis_names and \
+                        logits.shape[-1] % mesh.shape["model"] == 0:
+                    return P(dp, None, "model")
+                return None
+            logits = tuning.constrain(logits, _spec)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # gather-free gold pick: fused iota-compare + reduce. (A gather from
+        # a (data x model)-sharded operand trips XLA's partitioner inside
+        # partial-manual shard_map regions, and this is TP-vocab friendly.)
+        v = logits.shape[-1]
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                        logits.ndim - 1)
+        gold = jnp.sum(jnp.where(iota == yb[..., None], logits, 0.0),
+                       axis=-1)
+        return tot + jnp.sum(lse - gold), None
+
+    tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, yc))
+    return tot / (b * l)
+
+
+def train_loss(params: dict, cfg: ModelConfig, batch: dict, *,
+               moe_mode: str = "scan", remat: str = "full",
+               act_spec=None) -> tuple[jax.Array, dict]:
+    x, aux = forward(params, cfg, batch["tokens"],
+                     batch.get("enc_embeddings"), moe_mode=moe_mode,
+                     remat=remat, act_spec=act_spec,
+                     long_mode=batch.get("long_mode", False))
+    if cfg.frontend == "audio":          # loss only over the token region
+        x = x[:, -batch["tokens"].shape[1]:]
+    loss = chunked_xent(x, _lm_head(params, cfg), batch["labels"])
+    total = loss + cfg.router_aux_coef * aux
+    return total, {"xent": loss, "router_aux": aux}
+
+
+# ---------------------------------------------------------------- prefill
+def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
+            enc_embeddings: Optional[jax.Array] = None, *,
+            cache_len: Optional[int] = None, long_mode: bool = False,
+            moe_mode: str = "scan", act_spec=None):
+    """Full-sequence pass that returns (last_token_logits, populated cache)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    enc = None
+    if cfg.frontend:
+        enc = enc_embeddings @ params["frontend_proj"]
+        if cfg.frontend == "audio":
+            x = jnp.concatenate([enc.astype(x.dtype), x], axis=1)
+            enc = None
+    x = _constrain(x, act_spec)
+    l_total = x.shape[1]
+    cache_len = cache_len or l_total
+    positions = jnp.arange(l_total, dtype=jnp.int32)
+    plan = cfg.block_plan()
+
+    def superblock(h, block_params):
+        h = _constrain(h, act_spec)
+        caches = {}
+        for i, (mixer, is_moe) in enumerate(plan):
+            lp = block_params[f"l{i}"]
+            kind, window = effective_mixer(cfg, mixer, long_mode)
+            hn = layers.rmsnorm(lp["norm1"], h, cfg.rmsnorm_eps)
+            qb = _pick_block(l_total, 512)
+            if kind in ("A", "S"):
+                mo = layers.attention(lp["mixer"], cfg, hn, positions,
+                                      window=window, q_block=qb, kv_block=qb)
+                k, v = layers.compute_kv(lp["mixer"], cfg, hn, positions)
+                c = cache_len if kind == "A" else min(window, cache_len)
+                caches[f"l{i}"] = kvcache.fill_from_prefill(cfg, k, v, c)
+            elif kind == "X":
+                mo = layers.cross_attention(lp["mixer"], cfg, hn, enc,
+                                            q_block=qb)
+                k, v = layers.compute_kv(lp["mixer"], cfg, enc, None)
+                caches[f"l{i}"] = {"k": k, "v": v}
+            elif kind == "M":
+                mo, (ssm, conv) = mamba2.mamba_forward(lp["mixer"], cfg, hn)
+                caches[f"l{i}"] = {"ssm": ssm, "conv": conv}
+            h = h + mo
+            if "ffn" in lp:
+                h2 = layers.rmsnorm(lp["norm2"], h, cfg.rmsnorm_eps)
+                if is_moe:
+                    f, _ = moe.moe_apply(lp["ffn"], cfg, h2, mode=moe_mode)
+                else:
+                    f = layers.mlp(lp["ffn"], cfg, h2)
+                h = h + f
+        return h, caches
+
+    x, cache = jax.lax.scan(superblock, x, params["blocks"])
+    x = layers.rmsnorm(params["final_norm"], x, cfg.rmsnorm_eps)
+    last = x[:, -1, :] @ _lm_head(params, cfg)
+    return last.astype(jnp.float32), cache
+
+
+# ----------------------------------------------------------------- decode
+def serve_step(params: dict, cfg: ModelConfig, cache, tokens: jax.Array,
+               pos: jax.Array, *, long_mode: bool = False,
+               moe_mode: str = "scan", act_spec=None):
+    """One decode step. tokens: (B, 1) int32; pos: () current position.
+
+    Returns (logits (B, V) f32, new_cache).
+    """
+    x = jnp.take(params["embed"], tokens, axis=0)      # (B,1,D)
+    plan = cfg.block_plan()
+
+    def superblock(h, xs):
+        block_params, block_cache = xs
+        new_cache = {}
+        for i, (mixer, is_moe) in enumerate(plan):
+            lp = block_params[f"l{i}"]
+            cc = block_cache[f"l{i}"]
+            kind, _ = effective_mixer(cfg, mixer, long_mode)
+            hn = layers.rmsnorm(lp["norm1"], h, cfg.rmsnorm_eps)
+            if kind in ("A", "S"):
+                k, v = layers.compute_kv(lp["mixer"], cfg, hn,
+                                         pos[None].astype(jnp.int32))
+                cc = kvcache.write_kv(cc, k, v, pos)
+                cpos = kvcache.slot_positions(pos + 1, cc["k"].shape[1])
+                mo = layers.decode_attention(lp["mixer"], cfg, hn, cc["k"],
+                                             cc["v"], cpos, pos)
+            elif kind == "X":
+                mo = layers.decode_cross_attention(lp["mixer"], cfg, hn,
+                                                   cc["k"], cc["v"])
+            elif kind == "M":
+                mo, (ssm, conv) = mamba2.mamba_decode_step(
+                    lp["mixer"], cfg, hn, cc["ssm"], cc["conv"])
+                cc = {"ssm": ssm, "conv": conv}
+            h = h + mo
+            if "ffn" in lp:
+                h2 = layers.rmsnorm(lp["norm2"], h, cfg.rmsnorm_eps)
+                if is_moe:
+                    f, _ = moe.moe_apply(lp["ffn"], cfg, h2, mode=moe_mode)
+                else:
+                    f = layers.mlp(lp["ffn"], cfg, h2)
+                h = h + f
+            new_cache[f"l{i}"] = cc
+        return h, new_cache
+
+    x, new_cache = jax.lax.scan(superblock, x, (params["blocks"], cache))
+    x = layers.rmsnorm(params["final_norm"], x, cfg.rmsnorm_eps)
+    logits = (x[:, 0, :] @ _lm_head(params, cfg)).astype(jnp.float32)
+    return logits, new_cache

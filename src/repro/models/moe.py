@@ -1,0 +1,206 @@
+"""Mixture-of-Experts layer: top-k router + expert MLPs.
+
+Two dispatch modes:
+  * "dense": every expert computes every token, outputs weighted by the
+    (sparse) gate matrix. Exact; used for tiny smoke configs and as the
+    oracle in tests.
+  * "scan": lax.scan over experts with per-expert token capacity
+    C = ceil(L*k/E * capacity_factor). Each expert gathers its top-C tokens
+    (by gate weight — overflow drops the lowest-gate tokens), runs the MLP,
+    and scatter-adds back. Active-parameter FLOPs only; tiny live memory;
+    HLO stays small for 128-expert configs. Gathers are batch-row local, so
+    under data sharding they stay on-shard.
+
+Router aux loss is the standard switch-style load-balance term.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from . import tuning
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.d_ff_expert
+    dt = cfg.jnp_dtype
+    ks = jax.random.split(key, 4)
+    std_in, std_out = d ** -0.5, f ** -0.5
+    p = {
+        "router": (jax.random.normal(ks[0], (d, e)) * std_in).astype(dt),
+        "wi": (jax.random.normal(ks[1], (e, d, f)) * std_in).astype(dt),
+        "wo": (jax.random.normal(ks[3], (e, f, d)) * std_out).astype(dt),
+    }
+    if cfg.activation == "swiglu":
+        p["wg"] = (jax.random.normal(ks[2], (e, d, f)) * std_in).astype(dt)
+    return p
+
+
+def _expert_mlp(cfg: ModelConfig, wi, wg, wo, x):
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(x @ wg) * (x @ wi)
+    elif cfg.activation == "squared_relu":
+        h = jnp.square(jax.nn.relu(x @ wi))
+    else:
+        h = jax.nn.gelu(x @ wi)
+    return h @ wo
+
+
+def _route(p, cfg: ModelConfig, x):
+    """x: (B, L, D) -> gates_full (B, L, E) sparse, aux loss scalar."""
+    logits = (x @ p["router"]).astype(jnp.float32)          # (B,L,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    k = cfg.num_experts_per_tok
+    top_vals, top_idx = jax.lax.top_k(probs, k)             # (B,L,k)
+    top_vals = top_vals / jnp.maximum(
+        top_vals.sum(-1, keepdims=True), 1e-9)              # renormalize
+    onehot = jax.nn.one_hot(top_idx, cfg.num_experts,
+                            dtype=jnp.float32)              # (B,L,k,E)
+    gates_full = (onehot * top_vals[..., None]).sum(axis=2)  # (B,L,E)
+    # load-balance aux (Switch): E * sum_e mean(frac_e) * mean(prob_e)
+    frac = (onehot.sum(axis=2)).mean(axis=(0, 1))           # (E,)
+    mean_prob = probs.mean(axis=(0, 1))
+    aux = cfg.num_experts * jnp.sum(frac * mean_prob) / cfg.num_experts_per_tok
+    return gates_full, aux
+
+
+def moe_dense(p: dict, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Exact dense dispatch (oracle / tiny configs)."""
+    gates, aux = _route(p, cfg, x)
+    wg = p.get("wg")
+
+    def one_expert(e):
+        h = _expert_mlp(cfg, p["wi"][e], None if wg is None else wg[e],
+                        p["wo"][e], x)
+        return h * gates[..., e:e + 1].astype(x.dtype)
+
+    y = sum(one_expert(e) for e in range(cfg.num_experts))
+    return y, aux
+
+
+def moe_scan(p: dict, cfg: ModelConfig, x: jax.Array,
+             capacity_factor: float = 1.25) -> Tuple[jax.Array, jax.Array]:
+    """Capacity-based scan-over-experts dispatch (scale path)."""
+    b, l, d = x.shape
+    if l == 1 and b > 1:
+        # decode: route across the batch so experts see B tokens, not B calls
+        y, aux = moe_scan(p, cfg, x.reshape(1, b, d), capacity_factor)
+        return y.reshape(b, 1, d), aux
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    cap = int(math.ceil(l * k / e * capacity_factor))
+    cap = min(l, max(1, ((cap + 7) // 8) * 8))
+    gates, aux = _route(p, cfg, x)                          # (B,L,E)
+    gates_t = gates.transpose(2, 0, 1)                      # (E,B,L)
+    wi, wg, wo = p["wi"], p.get("wg"), p["wo"]
+    if tuning.enabled("moe_bank_gather"):
+        # Gather the expert bank across the FSDP axis ONCE per layer, TP on
+        # the expert-ff dim; without this the bank is re-gathered inside
+        # every expert-scan step (§Perf hillclimb #1).
+        def _in_spec(mesh):
+            return P(None, None, "model") \
+                if "model" in mesh.axis_names and \
+                wi.shape[-1] % mesh.shape["model"] == 0 else None
+
+        def _out_spec(mesh):
+            return P(None, "model", None) \
+                if "model" in mesh.axis_names and \
+                wo.shape[1] % mesh.shape["model"] == 0 else None
+
+        wi = tuning.constrain(wi, _in_spec)
+        wo = tuning.constrain(wo, _out_spec)
+        if wg is not None:
+            wg = tuning.constrain(wg, _in_spec)
+    has_g = wg is not None
+    xs = (wi, wg, wo, gates_t) if has_g else (wi, wo, gates_t)
+
+    def body(y, xs_e):
+        if has_g:
+            wi, wg, wo, g = xs_e
+        else:
+            wi, wo, g = xs_e
+            wg = None
+        vals, ids = jax.lax.top_k(g, cap)                   # (B,cap)
+        xg = jnp.take_along_axis(x, ids[..., None], axis=1)  # (B,cap,D)
+        h = _expert_mlp(cfg, wi, wg, wo, xg)
+        h = h * vals[..., None].astype(x.dtype)
+        y = y.at[jnp.arange(b)[:, None], ids].add(h)
+        return y, None
+
+    y0 = jnp.zeros_like(x)
+    y, _ = jax.lax.scan(body, y0, xs)
+    return y, aux
+
+
+def moe_grouped(p: dict, cfg: ModelConfig, x: jax.Array,
+                capacity_factor: float = 1.25) -> Tuple[jax.Array, jax.Array]:
+    """Grouped-einsum dispatch: all experts in ONE batched dot per matmul.
+
+    Same capacity/drop policy as moe_scan, but the expert dimension is a
+    dot_general batch dim, so TP partial-sum reduction happens once per
+    layer instead of once per expert-scan step (§Perf hillclimb P1b).
+    Costs (B, E, C, D)-shaped gathered activations transiently.
+    """
+    b, l, d = x.shape
+    if l == 1 and b > 1:
+        y, aux = moe_grouped(p, cfg, x.reshape(1, b, d), capacity_factor)
+        return y.reshape(b, 1, d), aux
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    cap = int(math.ceil(l * k / e * capacity_factor))
+    cap = min(l, max(1, ((cap + 7) // 8) * 8))
+    gates, aux = _route(p, cfg, x)                          # (B,L,E)
+    gates_be = gates.transpose(0, 2, 1)                     # (B,E,L)
+    vals, ids = jax.lax.top_k(gates_be, cap)                # (B,E,C)
+    # keep the gating path in model dtype: f32 gate weights promote the
+    # whole (B,E,C,D) backward to f32 (2x collective/HBM bytes; §Perf P1d)
+    vals = vals.astype(x.dtype)
+    bidx = jnp.arange(b)[:, None, None]
+    xg = x[bidx, ids]                                       # (B,E,C,D)
+    wi, wg, wo = p["wi"], p.get("wg"), p["wo"]
+    if tuning.enabled("moe_expert_parallel"):
+        # Expert parallelism: shard the E dim over "model"; the gathered
+        # tokens move once via all-to-all (dispatch) instead of paying a TP
+        # partial-sum all-reduce per matmul (§Perf P1e).
+        def _w_spec(w):
+            def f(mesh):
+                if "model" in mesh.axis_names and \
+                        w.shape[0] % mesh.shape["model"] == 0:
+                    return P("model", None, None)
+                return None
+            return f
+
+        def _xg_spec(mesh):
+            if "model" in mesh.axis_names and \
+                    e % mesh.shape["model"] == 0:
+                return P(None, "model", None, None)
+            return None
+
+        wi = tuning.constrain(wi, _w_spec(wi))
+        wo = tuning.constrain(wo, _w_spec(wo))
+        if wg is not None:
+            wg = tuning.constrain(wg, _w_spec(wg))
+        xg = tuning.constrain(xg, _xg_spec)
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", xg, wg)) * \
+            jnp.einsum("becd,edf->becf", xg, wi)
+    elif cfg.activation == "squared_relu":
+        h = jnp.square(jax.nn.relu(jnp.einsum("becd,edf->becf", xg, wi)))
+    else:
+        h = jax.nn.gelu(jnp.einsum("becd,edf->becf", xg, wi))
+    y_e = jnp.einsum("becf,efd->becd", h, wo)
+    y_e = y_e * vals[..., None]
+    y = jnp.zeros_like(x).at[bidx, ids].add(y_e)
+    return y, aux
+
+
+def moe_apply(p: dict, cfg: ModelConfig, x: jax.Array,
+              mode: str = "scan") -> Tuple[jax.Array, jax.Array]:
+    if mode == "dense":
+        return moe_dense(p, cfg, x)
+    if mode == "grouped":
+        return moe_grouped(p, cfg, x)
+    return moe_scan(p, cfg, x)

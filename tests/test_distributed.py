@@ -1,0 +1,142 @@
+"""Distributed CHB strategies, run in subprocesses with 8 fake devices
+(so the main pytest process keeps its single-device view)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(code: str, devices: int = 8) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=600)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    return json.loads(r.stdout.splitlines()[-1])
+
+
+COMMON = textwrap.dedent("""
+    import jax, json
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs import get
+    from repro.core import chb, distributed
+    from repro.core.chb import FedOptConfig
+    from repro.launch import sharding as shr
+    from repro.models import model
+    from repro.data import lm_data
+
+    cfg = get("chb-paper-lm-124m").reduced()
+    fcfg = FedOptConfig(alpha=0.02, beta=0.4, eps1=2.0, num_workers=2)
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    def loss_fn(p, b):
+        return model.train_loss(p, cfg, b, remat="none")[0]
+    lm = lm_data.MarkovLM(cfg.vocab_size, seed=0)
+    rng = np.random.default_rng(0)
+    raw = [lm.sample(rng, 8, 32) for _ in range(4)]
+    batches = [{"tokens": jnp.asarray(r[:, :-1]),
+                "labels": jnp.asarray(r[:, 1:])} for r in raw]
+""")
+
+
+def test_scan_strategy_matches_single_device_reference():
+    """jit-sharded scan strategy on an 8-device mesh must equal the
+    unsharded single-device run bit-for-bit in structure and closely in
+    value."""
+    code = COMMON + textwrap.dedent("""
+        # reference: no mesh
+        ref_state = distributed.init_scan_state(fcfg, params)
+        ref_step = jax.jit(distributed.make_scan_step(fcfg, loss_fn))
+        rp, rs = params, ref_state
+        ref_losses, ref_tx = [], []
+        for b in batches:
+            wb = {k: v.reshape(2, 4, -1) for k, v in b.items()}
+            rp, rs, m = ref_step(rp, rs, wb)
+            ref_losses.append(float(m["loss"])); ref_tx.append(float(m["transmitted"]))
+
+        # sharded: (4,2) mesh
+        mesh = jax.make_mesh((4,2), ("data","model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        sh = shr.params_shardings(jax.eval_shape(lambda: params), mesh)
+        p2 = jax.tree_util.tree_map(jax.device_put, params, sh)
+        st2 = distributed.init_scan_state(fcfg, p2)
+        step2 = jax.jit(distributed.make_scan_step(fcfg, loss_fn))
+        losses, txs = [], []
+        with mesh:
+            for b in batches:
+                wb = {k: jax.device_put(v.reshape(2, 4, -1),
+                                        NamedSharding(mesh, P(None, "data")))
+                      for k, v in b.items()}
+                p2, st2, m = step2(p2, st2, wb)
+                losses.append(float(m["loss"])); txs.append(float(m["transmitted"]))
+        print(json.dumps({"ref_losses": ref_losses, "losses": losses,
+                          "ref_tx": ref_tx, "tx": txs}))
+    """)
+    out = run_sub(code)
+    import numpy as np
+    np.testing.assert_allclose(out["losses"], out["ref_losses"],
+                               rtol=2e-4, atol=2e-4)
+    assert out["tx"] == out["ref_tx"]
+
+
+def test_pod_strategy_matches_scan_strategy():
+    """Pod strategy (shard_map manual over pod, workers=pods) must agree
+    with the scan strategy (workers=batch groups) given identical data
+    splits, on a (2,2,2) mesh."""
+    code = COMMON + textwrap.dedent("""
+        mesh = jax.make_mesh((2,2,2), ("pod","data","model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*3)
+        shp = shr.params_shardings(jax.eval_shape(lambda: params), mesh,
+                                   fsdp_axes=("data",), gather_safe=True)
+        # scan strategy reference (workers = 2 groups, same split as pods)
+        p1 = jax.tree_util.tree_map(jax.device_put, params, shp)
+        st1 = distributed.init_scan_state(fcfg, p1)
+        step1 = jax.jit(distributed.make_scan_step(fcfg, loss_fn))
+        # pod strategy
+        p2 = jax.tree_util.tree_map(jax.device_put, params, shp)
+        st2 = distributed.init_pod_state(fcfg, p2, mesh)
+        step2 = jax.jit(distributed.make_pod_step(fcfg, loss_fn, mesh))
+        l1s, l2s, t1s, t2s = [], [], [], []
+        with mesh:
+            for b in batches:
+                wb = {k: v.reshape(2, 4, -1) for k, v in b.items()}
+                p1, st1, m1 = step1(p1, st1, wb)
+                fb = {k: jax.device_put(v, NamedSharding(mesh, P(("pod","data"))))
+                      for k, v in b.items()}
+                p2, st2, m2 = step2(p2, st2, fb)
+                l1s.append(float(m1["loss"])); l2s.append(float(m2["loss"]))
+                t1s.append(float(m1["transmitted"])); t2s.append(float(m2["transmitted"]))
+        d = max(abs(a-b) for a, b in zip(l1s, l2s))
+        print(json.dumps({"l1": l1s, "l2": l2s, "t1": t1s, "t2": t2s,
+                          "maxdiff": d}))
+    """)
+    out = run_sub(code)
+    assert out["maxdiff"] < 3e-3, out
+    assert out["t1"] == out["t2"]
+
+
+def test_quantized_scan_strategy_runs():
+    code = COMMON + textwrap.dedent("""
+        import dataclasses
+        fq = dataclasses.replace(fcfg, quantize="int8")
+        st = distributed.init_scan_state(fq, params)
+        step = jax.jit(distributed.make_scan_step(fq, loss_fn))
+        p = params
+        losses = []
+        for b in batches:
+            wb = {k: v.reshape(2, 4, -1) for k, v in b.items()}
+            p, st, m = step(p, st, wb)
+            losses.append(float(m["loss"]))
+        ok = all(np.isfinite(losses))
+        print(json.dumps({"ok": bool(ok), "losses": losses,
+            "bytes": float(st.comm.uplink_bytes)}))
+    """)
+    out = run_sub(code)
+    assert out["ok"] and out["bytes"] > 0

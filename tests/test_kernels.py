@@ -1,0 +1,173 @@
+"""Per-kernel validation: sweep shapes/dtypes, assert_allclose vs ref.py
+oracles (Pallas kernels run in interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import censor, flash_attention, hb_update, ref
+
+SHAPES = [(128,), (1000,), (8, 128), (3, 1000), (5, 7, 11), (2, 256, 130)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _pair(shape, dtype, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    g = jax.random.normal(k1, shape).astype(dtype)
+    h = jax.random.normal(k2, shape).astype(dtype)
+    return g, h
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_censor_delta_sqnorm(shape, dtype):
+    g, h = _pair(shape, dtype)
+    got = censor.censor_delta_sqnorm(g, h, interpret=True)
+    want = ref.censor_delta_sqnorm(g, h)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("transmit", [0, 1])
+def test_censor_select(shape, dtype, transmit):
+    g, h = _pair(shape, dtype, seed=1)
+    got = censor.censor_select(g, h, jnp.asarray(transmit), interpret=True)
+    want = ref.censor_select(g, h, jnp.asarray(transmit))
+    assert got.dtype == want.dtype and got.shape == want.shape
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_hb_update(shape, dtype):
+    g, h = _pair(shape, dtype, seed=2)
+    p = (g * 0.9).astype(dtype)
+    got = hb_update.hb_update(g, h, p, 0.1, 0.4, interpret=True)
+    want = ref.hb_update(g, h, p, 0.1, 0.4)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-6,
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("h,kh", [(4, 4), (8, 2)])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 32),
+                                           (False, None)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_flash_attention_kernel(h, kh, causal, window, dtype):
+    key = jax.random.PRNGKey(3)
+    b, l, d = 2, 128, 32
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, h, l, d)).astype(dtype)
+    k = jax.random.normal(kk, (b, kh, l, d)).astype(dtype)
+    v = jax.random.normal(kv, (b, kh, l, d)).astype(dtype)
+    got = flash_attention.flash_attention_pallas(
+        q, k, v, causal=causal, window=window, q_block=32, kv_block=64,
+        interpret=True)
+    want = ref.flash_attention_fwd(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_kernel_rectangular_kv():
+    """cross-attention shape: Lq != S."""
+    key = jax.random.PRNGKey(4)
+    q = jax.random.normal(key, (1, 4, 64, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 2, 256, 16))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, 256, 16))
+    got = flash_attention.flash_attention_pallas(
+        q, k, v, causal=False, q_block=32, kv_block=64, interpret=True)
+    want = ref.flash_attention_fwd(q, k, v, causal=False)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 5000), seed=st.integers(0, 100),
+       dtype_i=st.integers(0, 1))
+def test_property_censor_roundtrip(n, seed, dtype_i):
+    """select(g,h,1)==g, select(g,h,0)==h, sqnorm matches, any shape."""
+    dtype = DTYPES[dtype_i]
+    g, h = _pair((n,), dtype, seed=seed)
+    np.testing.assert_array_equal(
+        np.asarray(censor.censor_select(g, h, jnp.asarray(1),
+                                        interpret=True)),
+        np.asarray(g.astype(h.dtype)))
+    np.testing.assert_array_equal(
+        np.asarray(censor.censor_select(g, h, jnp.asarray(0),
+                                        interpret=True)),
+        np.asarray(h))
+    got = censor.censor_delta_sqnorm(g, h, interpret=True)
+    want = ref.censor_delta_sqnorm(g, h)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(rows=st.integers(1, 64), alpha=st.floats(1e-4, 1.0),
+       beta=st.floats(0.0, 0.99), seed=st.integers(0, 100))
+def test_property_hb_update(rows, alpha, beta, seed):
+    g, h = _pair((rows, 33), jnp.float32, seed=seed)
+    p = (g * 0.5).astype(jnp.float32)
+    got = hb_update.hb_update(g, h, p, alpha, beta, interpret=True)
+    want = ref.hb_update(g, h, p, alpha, beta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------- decode attention kernel
+from repro.kernels import decode_attention as da
+
+
+@pytest.mark.parametrize("h,kh", [(4, 4), (8, 2)])
+@pytest.mark.parametrize("pos", [5, 63, 200])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_decode_attention_kernel(h, kh, pos, dtype):
+    key = jax.random.PRNGKey(7)
+    b, c, d = 2, 128, 32
+    q = jax.random.normal(key, (b, h, d)).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, kh, c, d)).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, kh, c, d)).astype(dtype)
+    from repro.models.kvcache import slot_positions
+    cpos = slot_positions(jnp.asarray(pos + 1), c)
+    got = da.decode_attention_pallas(q, k, v, cpos, jnp.asarray(pos),
+                                     block=32, interpret=True)
+    want = da.decode_attention_ref(q, k, v, cpos, jnp.asarray(pos))
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_decode_attention_matches_model_layer():
+    """Kernel semantics == the model's decode_attention math."""
+    from repro.configs.base import ModelConfig
+    from repro.models import layers
+    cfg = ModelConfig(name="t", family="dense", num_layers=1, d_model=64,
+                      num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+                      vocab_size=97, layer_pattern="A", scan_period=1,
+                      dtype="float32")
+    p = layers.init_attention(jax.random.PRNGKey(0), cfg)
+    b, c = 2, 64
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, 1, 64)) * 0.5
+    kc = jax.random.normal(jax.random.PRNGKey(2), (b, c, 2, 16))
+    vc = jax.random.normal(jax.random.PRNGKey(3), (b, c, 2, 16))
+    pos = jnp.asarray(20)
+    from repro.models.kvcache import slot_positions
+    cpos = slot_positions(pos + 1, c)
+    ref_out = layers.decode_attention(p, cfg, x, kc, vc, cpos, pos)
+    # kernel path: q projection + rope identical to the layer, then kernel
+    q = (x @ p["wq"]).reshape(b, 1, 4, 16)
+    q = layers.rope(q, pos[None].astype(jnp.int32), cfg.rope_theta)
+    o = da.decode_attention_pallas(q[:, 0].reshape(b, 4, 16),
+                                   kc.transpose(0, 2, 1, 3),
+                                   vc.transpose(0, 2, 1, 3),
+                                   cpos, pos, block=32)
+    got = (o.reshape(b, 1, 64) @ p["wo"])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref_out),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,43 @@
+"""Minimal reproducer for an XLA SPMD partitioner CHECK-failure.
+
+F spmd_partitioner_util.cc:504 Check failed:
+  partition_group_list.num_replica_groups() *
+  partition_group_list.num_devices_per_group()
+  == device_groups.num_devices_per_group()
+
+Trigger: a lax.scan (while loop) whose body touches a MODEL-axis-sharded
+array, inside a shard_map that is partial-manual over a "pod" axis, on a
+(2,16,16) host-device mesh (jax 0.8.2 / CPU PJRT). The same program
+compiles fine on a (2,2,2) mesh, and without the while loop, and with the
+array sharded over the data axis only. A pure-pjit vmap-over-pods variant
+crashes identically, so this is not specific to shard_map.
+
+Run:  XLA_FLAGS=--xla_force_host_platform_device_count=512 \
+        PYTHONPATH=src python tools/xla_partitioner_repro.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+mesh = jax.make_mesh((2, 16, 16), ("pod", "data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+D, B = 256, 64
+W = jax.device_put(jnp.ones((D, D)), NamedSharding(mesh, P(None, "model")))
+x = jax.device_put(jnp.ones((B, D)), NamedSharding(mesh, P(("pod", "data"))))
+
+
+def inner(w, xx):
+    def body(h, _):
+        return jnp.tanh(h @ w), None
+    h, _ = jax.lax.scan(body, xx, None, length=3)
+    return jax.lax.psum(jnp.mean(h), "pod")
+
+
+f = jax.shard_map(inner, mesh=mesh, in_specs=(P(), P("pod")),
+                  out_specs=P(), axis_names={"pod"}, check_vma=False)
+with mesh:
+    print(jax.jit(f)(W, x))  # aborts in the SPMD partitioner
