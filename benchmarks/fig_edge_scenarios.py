@@ -1,0 +1,109 @@
+"""Edge-deployment scenario sweep: CHB vs HB vs LAG vs GD under realistic
+wireless conditions, reporting *energy-to-accuracy* and
+*wall-clock-to-accuracy* — the costs the paper motivates (Sec. I) but never
+measures.
+
+Scenarios (all on the paper's 9-worker linear-regression task):
+  ideal          zero-latency lossless channel, full participation — the
+                 sync anchor; numbers here match the core simulator.
+  lossy          1 Mbps uplink, 20% Bernoulli packet loss.
+  stragglers     2 of 9 clients are 15x slower (exp jitter); the server
+                 advances on an 8/9 quorum and folds late uplinks stale.
+  fading         block-fading uplink bitrate (Rayleigh-power multiplier).
+  partial        server samples 50% of clients per round (alpha halved —
+                 scheduler-forced staleness shrinks the stable step range).
+
+  PYTHONPATH=src python -m benchmarks.fig_edge_scenarios [--rounds N]
+"""
+import argparse
+
+import jax
+
+jax.config.update("jax_enable_x64", True)   # paper experiments run in f64
+
+from repro.core import baselines, simulator
+from repro.data import paper_tasks
+from repro import fed
+
+ALGOS = ["chb", "hb", "lag", "gd"]
+
+
+def scenarios(m: int) -> dict:
+    return {
+        "ideal": dict(
+            edge=lambda seed: fed.sync_config(m, seed=seed),
+            alpha_scale=1.0),
+        "lossy": dict(
+            edge=lambda seed: fed.EdgeConfig(
+                population=fed.uniform_population(m, compute_mean_s=1.0),
+                channel=fed.ChannelConfig.lossy(0.2, uplink_rate_bps=1e6),
+                seed=seed),
+            alpha_scale=1.0),
+        "stragglers": dict(
+            edge=lambda seed: fed.EdgeConfig(
+                population=fed.straggler_population(
+                    m, compute_mean_s=1.0, straggler_frac=0.22,
+                    straggler_slowdown=15.0, jitter="exp", seed=seed),
+                channel=fed.ChannelConfig(uplink_rate_bps=1e6),
+                quorum=8.0 / 9.0, seed=seed),
+            alpha_scale=1.0),
+        "fading": dict(
+            edge=lambda seed: fed.EdgeConfig(
+                population=fed.uniform_population(m, compute_mean_s=1.0),
+                channel=fed.ChannelConfig.fading(uplink_rate_bps=1e6),
+                seed=seed),
+            alpha_scale=1.0),
+        "partial": dict(
+            edge=lambda seed: fed.EdgeConfig(
+                population=fed.uniform_population(m, compute_mean_s=1.0,
+                                                  participation=0.5),
+                channel=fed.ChannelConfig(uplink_rate_bps=1e6),
+                seed=seed),
+            alpha_scale=0.5),
+    }
+
+
+def main(rounds: int = 600) -> str:
+    m = 9
+    bundle = paper_tasks.make_linear_regression(m=m)
+    fstar = float(simulator.estimate_fstar(bundle.task, bundle.alpha_paper,
+                                           40000))
+    tol = 1e-6
+    hdr = (f"{'scenario':12s} {'algo':5s} {'rounds':>7s} {'uplinks':>8s} "
+           f"{'MB':>8s} {'energy J':>9s} {'wall s':>8s}")
+    print(f"\n== edge scenarios: {{uplinks, bytes, energy, wall-clock}} to "
+          f"f-f* < {tol:g} ==")
+    chb_wins = 0
+    rows = []
+    for sname, sc in scenarios(m).items():
+        print("\n" + hdr)
+        per_algo = {}
+        for algo in ALGOS:
+            cfg = baselines.ALGORITHMS[algo](
+                bundle.alpha_paper * sc["alpha_scale"], m)
+            hist = fed.run_edge(cfg, bundle.task, sc["edge"](seed=17),
+                                rounds)
+            met = fed.edge_metrics_to_accuracy(hist, fstar, tol)
+            per_algo[algo] = met
+            mb = met["bytes"] / 1e6 if met["bytes"] >= 0 else -1
+            print(f"{sname:12s} {algo:5s} {met['rounds']:7d} "
+                  f"{met['uplinks']:8d} {mb:8.2f} "
+                  f"{met['energy_j']:9.2f} {met['wall_clock_s']:8.2f}")
+            rows.append((sname, algo, met))
+        # headline: CHB reaches target with fewer uplinks than HB
+        if 0 <= per_algo["chb"]["uplinks"] < per_algo["hb"]["uplinks"] or \
+                per_algo["hb"]["uplinks"] < 0 <= per_algo["chb"]["uplinks"]:
+            chb_wins += 1
+    n_scen = len(scenarios(m))
+    print(f"\nCHB fewer-uplinks-than-HB in {chb_wins}/{n_scen} scenarios")
+    reached = sum(1 for _, a, met in rows
+                  if a == "chb" and met["rounds"] >= 0)
+    return (f"fig_edge_scenarios,0,chb_wins={chb_wins}/{n_scen};"
+            f"chb_reached={reached}/{n_scen}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=600)
+    args = ap.parse_args()
+    print(main(rounds=args.rounds))

@@ -17,10 +17,11 @@ def main() -> None:
 
     from . import (fig1_worker_comms, fig2_linreg, fig3_logreg,
                    fig10_stepsize, fig11_epsilon, fig12_descent,
-                   roofline, serving, table1_ijcnn, table2_small,
-                   table3_mnist)
+                   fig_edge_scenarios, roofline, serving, table1_ijcnn,
+                   table2_small, table3_mnist)
     benches = [
         ("fig1_worker_comms", fig1_worker_comms.main),
+        ("fig_edge_scenarios", fig_edge_scenarios.main),
         ("fig2_linreg", fig2_linreg.main),
         ("fig3_logreg", fig3_logreg.main),
         ("table1_ijcnn", table1_ijcnn.main),

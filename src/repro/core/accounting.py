@@ -4,8 +4,15 @@ The paper's headline metric is the number of worker->server (uplink)
 transmissions. On TPU the censoring is realized as a masked collective (see
 DESIGN.md §3), so the wire traffic that *would* occur in a federated
 deployment is tracked here as explicit counters carried through the jitted
-step. Counts are exact (per worker); bytes assume each transmission carries
-the full delta payload (optionally quantized).
+step. Counts are exact (per worker).
+
+Byte accounting is precision-safe without x64: a single float32 cell loses
+integer precision past 2^24 bytes (~16 MiB) of accumulated payload, after
+which small increments silently stop registering. Instead the cumulative
+payload is carried as a split int32 pair (whole MiB, remainder bytes) with
+an explicit carry at every update — exact up to 2^31 MiB (2 PiB) on any
+backend. ``uplink_bytes`` is a derived property for reporting; use
+``uplink_bytes_exact()`` outside jit when the exact integer matters.
 """
 from __future__ import annotations
 
@@ -13,12 +20,27 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+MIB = 1 << 20
+
+
+def split_bytes(nbytes: int) -> tuple[int, int]:
+    """Split a static (Python int) byte count into (whole_mib, rem_bytes)."""
+    return divmod(int(nbytes), MIB)
+
+
+def carry_bytes(mib: jax.Array, rem: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Normalize a split counter so that 0 <= rem < MIB (jit-safe)."""
+    c = rem // MIB
+    return mib + c, rem - c * MIB
 
 
 class CommStats(NamedTuple):
     """Carried inside optimizer state; all fields are jnp arrays."""
     uplink_count: jax.Array     # (M,) cumulative transmissions per worker
-    uplink_bytes: jax.Array     # () cumulative uplink payload bytes
+    uplink_mib: jax.Array       # () whole MiB of cumulative uplink payload
+    uplink_rem: jax.Array       # () remainder bytes (< MIB) of the payload
     downlink_count: jax.Array   # () cumulative server broadcasts (1/iter)
     iterations: jax.Array       # () iterations taken
 
@@ -26,23 +48,61 @@ class CommStats(NamedTuple):
     def init(cls, num_workers: int) -> "CommStats":
         return cls(
             uplink_count=jnp.zeros((num_workers,), jnp.int32),
-            uplink_bytes=jnp.zeros((), jnp.int64)
-            if jax.config.read("jax_enable_x64") else jnp.zeros((), jnp.float32),
+            uplink_mib=jnp.zeros((), jnp.int32),
+            uplink_rem=jnp.zeros((), jnp.int32),
             downlink_count=jnp.zeros((), jnp.int32),
             iterations=jnp.zeros((), jnp.int32),
         )
 
     def update(self, mask: jax.Array, payload_bytes) -> "CommStats":
-        """mask: (M,) float/bool transmit indicators for this iteration."""
+        """mask: (M,) float/bool transmit indicators for this iteration.
+
+        ``payload_bytes`` is the per-transmission payload size. It is a
+        static Python int on every in-repo call path, which keeps the split
+        accounting exact; a traced value is accepted as a fallback but is
+        only exact while it stays below 2^31 bytes.
+        """
         mask_i = mask.astype(jnp.int32)
-        pb = jnp.asarray(payload_bytes, self.uplink_bytes.dtype)
+        # jnp.sum promotes ints to the default int dtype under x64; the
+        # split counters are pinned to int32 so the scan carry is stable
+        n_tx = jnp.sum(mask_i).astype(jnp.int32)
+        if isinstance(payload_bytes, (int, np.integer)):
+            pb_mib, pb_rem = split_bytes(payload_bytes)
+        else:
+            pb = jnp.asarray(payload_bytes, jnp.int32)
+            pb_mib, pb_rem = pb // MIB, pb % MIB
+        mib, rem = carry_bytes(self.uplink_mib + n_tx * pb_mib,
+                               self.uplink_rem + n_tx * pb_rem)
         return CommStats(
             uplink_count=self.uplink_count + mask_i,
-            uplink_bytes=self.uplink_bytes
-            + jnp.sum(mask.astype(self.uplink_bytes.dtype)) * pb,
+            uplink_mib=mib,
+            uplink_rem=rem,
             downlink_count=self.downlink_count + 1,
             iterations=self.iterations + 1,
         )
+
+    def add_bytes_split(self, mib_inc: jax.Array,
+                        rem_inc: jax.Array) -> "CommStats":
+        """Fold a pre-split (mib, rem) byte increment (per-tensor path)."""
+        mib, rem = carry_bytes(self.uplink_mib + mib_inc,
+                               self.uplink_rem + rem_inc)
+        return self._replace(uplink_mib=mib, uplink_rem=rem)
+
+    @property
+    def uplink_bytes(self) -> jax.Array:
+        """Cumulative uplink payload bytes (float, for reporting).
+
+        Exact whenever the float mantissa covers the total; the stored
+        split counters are always exact — see ``uplink_bytes_exact``.
+        """
+        ftype = jnp.float64 if jax.config.read("jax_enable_x64") \
+            else jnp.float32
+        return self.uplink_mib.astype(ftype) * MIB \
+            + self.uplink_rem.astype(ftype)
+
+    def uplink_bytes_exact(self) -> int:
+        """Exact cumulative byte count as a Python int (host-side only)."""
+        return int(self.uplink_mib) * MIB + int(self.uplink_rem)
 
     @property
     def total_uplinks(self) -> jax.Array:

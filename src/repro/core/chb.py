@@ -31,10 +31,11 @@ from typing import Any, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from . import accounting
 from .accounting import CommStats
 from .censoring import delta_sqnorms, step_sqnorm, transmit_mask
 from .quantize import (payload_bytes_dense, payload_bytes_int8,
-                       tree_quantize_roundtrip)
+                       tree_quantize_roundtrip_per_worker)
 from .util import tree_stack_zeros, tree_sqnorm, tree_sum_leading
 
 
@@ -156,8 +157,8 @@ def step(cfg: FedOptConfig, state: FedOptState, params, worker_grads):
         new_ema = state.ema
 
     if cfg.quantize == "int8":
-        payload = jax.tree_util.tree_map(
-            lambda x: x, tree_quantize_roundtrip(pending))
+        # per-worker scales: worker m quantizes its own delta slice
+        payload = tree_quantize_roundtrip_per_worker(pending)
         new_err = jax.tree_util.tree_map(
             lambda p, q, e: _bcast(mask, p) * (p - q)
             + (1.0 - _bcast(mask, p)) * e.astype(p.dtype),
@@ -211,8 +212,9 @@ def _step_per_tensor(cfg: FedOptConfig, state: FedOptState, params, pending):
     leaves_ghat = treedef.flatten_up_to(state.ghat)
 
     m = cfg.num_workers
-    bdt = state.comm.uplink_bytes.dtype
-    new_ghat, bytes_up = [], jnp.zeros((), bdt)
+    new_ghat = []
+    mib_up = jnp.zeros((), jnp.int32)
+    rem_up = jnp.zeros((), jnp.int32)
     any_mask = jnp.zeros((m,), jnp.float32)
     for d, t, tp, h in zip(leaves_delta, leaves_theta, leaves_prev,
                            leaves_ghat):
@@ -222,8 +224,13 @@ def _step_per_tensor(cfg: FedOptConfig, state: FedOptState, params, pending):
                                    - tp.astype(jnp.float32)))
         mask_t = (dsq_t > cfg.eps1 * ssq_t).astype(jnp.float32)
         any_mask = jnp.maximum(any_mask, mask_t)
-        bytes_up = bytes_up + (jnp.sum(mask_t)
-                               * (d[0].size * d.dtype.itemsize)).astype(bdt)
+        n_tx_t = jnp.sum(mask_t).astype(jnp.int32)
+        # exact split-counter byte accounting (accounting.py): leaf payload
+        # is static, so divmod happens in Python; carry per leaf keeps the
+        # traced remainder below int32 range
+        pb_mib, pb_rem = accounting.split_bytes(d[0].size * d.dtype.itemsize)
+        mib_up, rem_up = accounting.carry_bytes(
+            mib_up + n_tx_t * pb_mib, rem_up + n_tx_t * pb_rem)
         new_ghat.append(h + _bcast(mask_t, h) * d.astype(h.dtype))
     new_ghat = jax.tree_util.tree_unflatten(treedef, new_ghat)
 
@@ -234,10 +241,11 @@ def _step_per_tensor(cfg: FedOptConfig, state: FedOptState, params, pending):
         params, agg, state.prev_params)
     comm = CommStats(
         uplink_count=state.comm.uplink_count + any_mask.astype(jnp.int32),
-        uplink_bytes=state.comm.uplink_bytes + bytes_up,
+        uplink_mib=state.comm.uplink_mib,
+        uplink_rem=state.comm.uplink_rem,
         downlink_count=state.comm.downlink_count + 1,
         iterations=state.comm.iterations + 1,
-    )
+    ).add_bytes_split(mib_up, rem_up)
     info = StepInfo(mask=any_mask,
                     delta_sq=delta_sqnorms(pending),
                     step_sq=step_sqnorm(params, state.prev_params),

@@ -49,10 +49,30 @@ def _tree_cast_like(t, ref):
     return jax.tree_util.tree_map(lambda x, r: x.astype(r.dtype), t, ref)
 
 
-def _payload_bytes(cfg: FedOptConfig, params) -> float:
+def _payload_bytes(cfg: FedOptConfig, params) -> int:
+    # must stay a Python int: CommStats.update only takes the exact
+    # split-counter path for ints (see accounting.py)
     if cfg.quantize == "int8":
         return payload_bytes_int8(params)
     return payload_bytes_dense(params)
+
+
+def _shard_map(f, mesh, in_specs, out_specs, manual_axes):
+    """Partial-manual shard_map via the top-level ``jax.shard_map`` API.
+
+    On jax 0.4.x the only alternative is the experimental
+    ``shard_map(auto=...)`` API, whose partial-manual mode hard-crashes the
+    XLA SPMD partitioner (process abort, no traceback) for this program —
+    see tools/xla_partitioner_repro.py — so fail fast instead.
+    """
+    if not hasattr(jax, "shard_map"):
+        raise NotImplementedError(
+            "the pod strategy needs the top-level jax.shard_map API "
+            "(jax >= 0.5); the 0.4.x experimental shard_map trips an XLA "
+            "SPMD-partitioner CHECK in partial-manual mode")
+    return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs,
+                         axis_names=set(manual_axes), check_vma=False)
 
 
 # ============================================================ scan strategy
@@ -231,9 +251,8 @@ def make_pod_step(cfg: FedOptConfig,
                 P("pod") if cfg.quantize else P(), P("pod"))
     out_specs = (pspec, pspec, P("pod"),
                  P("pod") if cfg.quantize else P(), P(), P(), P(), P(), P())
-    sharded = jax.shard_map(inner, mesh=mesh, in_specs=in_specs,
-                            out_specs=out_specs, axis_names={"pod"},
-                            check_vma=False)
+    sharded = _shard_map(inner, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, manual_axes={"pod"})
 
     def train_step(params, state: DistFedState, batch):
         (new_params, new_nabla, new_ghat, new_err, mask, n_tx, dsq, ssq,

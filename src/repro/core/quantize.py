@@ -42,6 +42,14 @@ def tree_quantize_roundtrip(tree):
     return jax.tree_util.tree_map(quantize_roundtrip, tree)
 
 
+def tree_quantize_roundtrip_per_worker(tree):
+    """Int8 round-trip of a leading-M stacked delta pytree, one scale per
+    worker slice — each worker quantizes its *own* delta, as it must in a
+    real deployment (a shared cross-worker scale is unrealizable)."""
+    return jax.tree_util.tree_map(
+        lambda x: jax.vmap(quantize_roundtrip)(x), tree)
+
+
 def payload_bytes_int8(tree) -> int:
     """Uplink bytes for one quantized transmission of this pytree."""
     leaves = jax.tree_util.tree_leaves(tree)

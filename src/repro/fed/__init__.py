@@ -1,0 +1,24 @@
+"""repro.fed: event-driven federated edge runtime around the CHB core.
+
+The core (``repro.core``) answers the paper's question — how many uplinks
+does censoring save? — under synchronous lockstep rounds. This package
+answers the deployment questions the paper raises but never simulates:
+stragglers, intermittent availability, lossy/fading channels, partial
+participation, and the energy / wall-clock cost of every byte.
+
+    population = fed.straggler_population(9, straggler_frac=0.2)
+    edge = fed.EdgeConfig(population=population,
+                          channel=fed.ChannelConfig.lossy(0.1),
+                          quorum=0.8)
+    hist = fed.run_edge(baselines.chb(alpha, 9), task, edge, num_rounds=500)
+
+``fed.sync_config(M)`` is the correctness anchor: it reproduces
+``core.simulator.run`` exactly (see tests/test_fed_runtime.py).
+"""
+from .channel import ChannelConfig, Transmission
+from .clients import (ClientProfile, Population, duty_cycle_population,
+                      intermittent_population, straggler_population,
+                      uniform_population)
+from .energy import EdgeStats, EnergyModel
+from .runner import (EdgeConfig, EdgeHistory, edge_metrics_to_accuracy,
+                     run_edge, sync_config)

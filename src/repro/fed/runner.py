@@ -1,0 +1,326 @@
+"""Event-driven federated edge runtime for the CHB family.
+
+Wraps the *exact* ``core/chb.step`` Algorithm-1 semantics in a deployment
+simulation: heterogeneous clients (``clients.py``) compute local gradients
+with per-client latency and availability, uplinks travel through a channel
+model (``channel.py``) that charges air time + joules (``energy.py``) and may
+drop packets, and the server advances by eq. (4) whenever a quorum of the
+round's cohort has reported.
+
+Correctness anchor (tested): with zero latency, lossless channel, full
+participation, and full quorum (``sync_config``), the event loop reduces to
+``core/simulator.run`` — numerically identical objective / uplink
+trajectories for GD / HB / LAG / CHB. Every deployment knob is a relaxation
+away from that anchor.
+
+Semantics under asynchrony — all derived from the eq. (5) stale-bank view:
+  * Client ``i`` is the only writer of bank row ``ghat_i``, and its local
+    copy advances in lockstep with the server's (drops are NACKed), so a
+    delta computed against the row is fold-safe *no matter how late it
+    arrives*. Stragglers' uplinks are folded on arrival ("stale folds").
+  * A censored client sends a zero-byte beacon (it still counts toward the
+    quorum — the server heard from it; its bank row stays stale, which is
+    precisely the eq. (5) semantics of censoring).
+  * A dropped uplink costs full air time and transmit energy but leaves the
+    server bank untouched, and the client does not advance its local copy.
+  * Clients that were unavailable or unsampled simply keep stale bank rows —
+    partial participation is "censoring by the scheduler".
+
+The event loop itself is host-side Python (a heap of timed events); all the
+math — gradient evaluation, censor test, bank folds, the eq. (4) server
+update — runs in jitted closures compiled once per run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import chb
+from ..core.censoring import step_sqnorm
+from ..core.chb import FedOptConfig
+from ..core.quantize import (payload_bytes_dense, payload_bytes_int8,
+                             tree_quantize_roundtrip)
+from ..core.simulator import FedTask, global_loss
+from ..core.util import (tree_sqnorm, tree_sum_leading, tree_worker_slice)
+from .channel import ChannelConfig
+from .clients import Population, uniform_population
+from .energy import EdgeStats, EnergyModel
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeConfig:
+    """Deployment scenario: who computes, over what air, at what cost."""
+    population: Population
+    channel: ChannelConfig = dataclasses.field(
+        default_factory=ChannelConfig)
+    energy: EnergyModel = dataclasses.field(default_factory=EnergyModel)
+    # server advances when this fraction of the round's cohort has reported
+    quorum: float = 1.0
+    seed: int = 0
+    # wall-clock step used to re-poll availability when nothing is in flight
+    retry_tick_s: float = 1.0
+
+    def __post_init__(self):
+        if not 0.0 < self.quorum <= 1.0:
+            raise ValueError("quorum must be in (0, 1]")
+
+
+def sync_config(num_clients: int, seed: int = 0) -> EdgeConfig:
+    """The degenerate scenario that must reproduce ``core/simulator.run``."""
+    return EdgeConfig(
+        population=uniform_population(num_clients, compute_mean_s=0.0),
+        channel=ChannelConfig.ideal(),
+        energy=EnergyModel(),
+        quorum=1.0,
+        seed=seed,
+    )
+
+
+class EdgeHistory(NamedTuple):
+    """Per-round trajectory + deployment accounting."""
+    objective: np.ndarray      # (R,) f(theta^k) before round k's update
+    comm_cum: np.ndarray       # (R,) cumulative uplink transmissions
+    mask: np.ndarray           # (R, M) 1 = fresh delta folded during round k
+    agg_grad_sqnorm: np.ndarray  # (R,) ||sum_m ghat_m||^2 at the update
+    wall_clock: np.ndarray     # (R,) seconds at the end of round k
+    energy_cum: np.ndarray     # (R,) cumulative joules across all clients
+    bytes_cum: np.ndarray      # (R,) cumulative uplink payload bytes
+    final_params: Any
+    final_bank: Any            # (M, ...) server stale-gradient bank
+    stats: EdgeStats
+
+
+class _Event(NamedTuple):
+    """Heap entry; ``seq`` makes same-time ordering FIFO-stable."""
+    time: float
+    seq: int
+    kind: str                  # "finish" | "arrive"
+    client: int
+    round_: int
+    data: Any                  # finish: None; arrive: (payload, delivered,
+    #                            transmitted, new_err_row)
+
+
+def _compile(cfg: FedOptConfig, task: FedTask):
+    """Jitted closures mirroring ``chb.step`` line-for-line (see module doc)."""
+    quantized = cfg.quantize == "int8"
+
+    def client_eval(params, data_i, ghat_row, err_row, ssq):
+        g = task.grad_fn(params, data_i)
+        delta = jax.tree_util.tree_map(
+            lambda x, h: x.astype(h.dtype) - h, g, ghat_row)
+        if quantized:
+            pending = jax.tree_util.tree_map(
+                lambda d, e: d + e.astype(d.dtype), delta, err_row)
+        else:
+            pending = delta
+        dsq = tree_sqnorm(pending)   # f32 accumulation == delta_sqnorms row
+        if cfg.eps1 > 0:
+            transmit = dsq > cfg.eps1 * ssq
+        else:
+            transmit = jnp.ones((), jnp.bool_)
+        if quantized:
+            payload = tree_quantize_roundtrip(pending)
+            new_err = jax.tree_util.tree_map(
+                lambda p, q: p - q, pending, payload)
+        else:
+            payload, new_err = pending, err_row
+        return payload, new_err, dsq, transmit
+
+    def fold(ghat, payload, i):
+        return jax.tree_util.tree_map(
+            lambda h, q: h.at[i].add(q.astype(h.dtype)), ghat, payload)
+
+    def server_update(params, prev_params, ghat):
+        agg = tree_sum_leading(ghat)
+        new_params = jax.tree_util.tree_map(
+            lambda t, g, tp: (t - cfg.alpha * g.astype(t.dtype)
+                              + cfg.beta * (t - tp)).astype(t.dtype),
+            params, agg, prev_params)
+        # ||theta^{k+1} - theta^k||^2, broadcast with theta^{k+1} so the next
+        # cohort runs the eq. (8) test with exactly chb.step's step norm
+        next_ssq = step_sqnorm(new_params, params)
+        return new_params, next_ssq, tree_sqnorm(agg)
+
+    loss = jax.jit(lambda p: global_loss(task, p))
+    return (jax.jit(client_eval), jax.jit(fold), jax.jit(server_update),
+            loss)
+
+
+def run_edge(cfg: FedOptConfig, task: FedTask, edge: EdgeConfig,
+             num_rounds: int) -> EdgeHistory:
+    """Run the deployment scenario for ``num_rounds`` server rounds."""
+    if cfg.granularity != "global":
+        raise NotImplementedError(
+            "fed.runner supports granularity='global' only")
+    if cfg.adaptive > 0:
+        raise NotImplementedError(
+            "fed.runner does not support adaptive censoring yet")
+    m = edge.population.num_clients
+    if cfg.num_workers != m:
+        raise ValueError(
+            f"cfg.num_workers={cfg.num_workers} != population "
+            f"num_clients={m}")
+
+    rng = np.random.default_rng(edge.seed)
+    client_eval, fold, server_update, loss = _compile(cfg, task)
+
+    # reuse chb.init so bank/err construction (dtypes included) is identical
+    st0 = chb.init(cfg, task.init_params)
+    ghat, err = st0.ghat, st0.err
+    params = task.init_params
+    prev_params = params           # theta^{-1} = theta^0, as in chb.init
+    ssq = jnp.zeros(())            # ||theta^0 - theta^{-1}||^2 = 0
+
+    payload_nbytes = (payload_bytes_int8(task.init_params)
+                      if cfg.quantize == "int8"
+                      else payload_bytes_dense(task.init_params))
+    down_nbytes = payload_bytes_dense(task.init_params)
+
+    stats = EdgeStats(num_clients=m)
+    prof = edge.population.profiles
+    idle = [True] * m
+    # params/ssq version each busy client is computing against
+    assigned: dict[int, tuple[Any, Any, int]] = {}
+
+    heap: list[_Event] = []
+    seq = 0
+    t = 0.0
+    round_ = 0
+
+    def push(time_, kind, client, rnd, data=None):
+        nonlocal seq
+        heapq.heappush(heap, _Event(time_, seq, kind, client, rnd, data))
+        seq += 1
+
+    def dispatch_cohort() -> list[int]:
+        """Sample idle+available clients; pushes their finish events."""
+        nonlocal t
+        for attempt in range(100_000):
+            cands = [i for i in range(m) if idle[i]
+                     and prof[i].is_available(t, rng)]
+            cohort = edge.population.sample_cohort(cands, rng)
+            if cohort:
+                break
+            if heap:        # let in-flight stragglers land and free clients
+                handle(heapq.heappop(heap))
+            else:           # everyone idle but unavailable: wait and re-poll
+                t += edge.retry_tick_s
+        else:
+            raise RuntimeError("no dispatchable client after 100k attempts")
+        for i in cohort:
+            idle[i] = False
+            assigned[i] = (params, ssq, round_)
+            dl = edge.channel.downlink_time(down_nbytes)
+            stats.record_downlink(i, edge.energy.rx_energy(down_nbytes))
+            ct = prof[i].draw_compute_time(rng)
+            stats.record_compute(
+                i, ct, edge.energy.compute_energy(ct, prof[i].compute_w))
+            push(t + dl + ct, "finish", i, round_)
+        return cohort
+
+    arrived_from: dict[int, int] = {}   # round -> arrivals from its cohort
+    fold_row = np.zeros((m,), np.int8)
+
+    def handle(ev: _Event) -> None:
+        nonlocal t, ghat, err
+        t = max(t, ev.time)
+        i = ev.client
+        if ev.kind == "finish":
+            p_i, ssq_i, rnd = assigned[i]
+            payload, new_err_row, _dsq, transmit = client_eval(
+                params=p_i, data_i=tree_worker_slice(task.worker_data, i),
+                ghat_row=tree_worker_slice(ghat, i),
+                err_row=tree_worker_slice(err, i) if cfg.quantize else (),
+                ssq=ssq_i)
+            if bool(transmit):
+                tx = edge.channel.uplink(payload_nbytes, rng)
+                stats.record_uplink(i, payload_nbytes, tx.time_s,
+                                    edge.energy.tx_energy(payload_nbytes),
+                                    tx.delivered)
+                push(ev.time + tx.time_s, "arrive", i, rnd,
+                     (payload, tx.delivered, True, new_err_row))
+            else:
+                stats.record_censored(i)
+                # zero-byte beacon: the server hears "no update" after the
+                # protocol overhead; no payload energy is charged
+                push(ev.time + edge.channel.overhead_s, "arrive", i, rnd,
+                     (None, True, False, None))
+        else:  # arrive
+            payload, delivered, transmitted, new_err_row = ev.data
+            if transmitted and delivered:
+                ghat = fold(ghat, payload, jnp.asarray(i))
+                if cfg.quantize:
+                    err = jax.tree_util.tree_map(
+                        lambda e, n: e.at[i].set(n.astype(e.dtype)),
+                        err, new_err_row)
+                fold_row[i] = 1
+                if ev.round_ != round_:
+                    stats.record_stale(i)
+            idle[i] = True
+            assigned.pop(i, None)
+            if ev.round_ >= round_:   # stale arrivals can't satisfy a quorum
+                arrived_from[ev.round_] = arrived_from.get(ev.round_, 0) + 1
+
+    objective, comm_cum, masks, gsq_hist = [], [], [], []
+    wall, energy_cum, bytes_cum = [], [], []
+
+    while round_ < num_rounds:
+        cohort = dispatch_cohort()
+        need = max(1, math.ceil(edge.quorum * len(cohort)))
+        while arrived_from.get(round_, 0) < need:
+            handle(heapq.heappop(heap))
+        # record f(theta^k) *before* the update, matching simulator.run
+        objective.append(float(loss(params)))
+        new_params, next_ssq, agg_sq = server_update(params, prev_params,
+                                                     ghat)
+        gsq_hist.append(float(agg_sq))
+        prev_params, params, ssq = params, new_params, next_ssq
+        masks.append(fold_row.copy())
+        fold_row[:] = 0
+        comm_cum.append(stats.total_uplinks)
+        wall.append(t)
+        energy_cum.append(stats.total_energy_j)
+        bytes_cum.append(stats.total_uplink_bytes)
+        arrived_from.pop(round_, None)
+        round_ += 1
+
+    stats.rounds = num_rounds
+    stats.wall_clock_s = t
+    return EdgeHistory(
+        objective=np.asarray(objective),
+        comm_cum=np.asarray(comm_cum, np.int64),
+        mask=np.stack(masks),
+        agg_grad_sqnorm=np.asarray(gsq_hist),
+        wall_clock=np.asarray(wall),
+        energy_cum=np.asarray(energy_cum),
+        bytes_cum=np.asarray(bytes_cum, np.int64),
+        final_params=params,
+        final_bank=ghat,
+        stats=stats,
+    )
+
+
+def edge_metrics_to_accuracy(hist: EdgeHistory, fstar: float,
+                             tol: float) -> dict:
+    """{rounds, uplinks, bytes, energy_j, wall_clock_s} when f - f* first
+    drops below ``tol``; all -1 if the tolerance is never reached."""
+    err = hist.objective - fstar
+    hits = np.nonzero(err < tol)[0]
+    if hits.size == 0:
+        return {"rounds": -1, "uplinks": -1, "bytes": -1,
+                "energy_j": -1.0, "wall_clock_s": -1.0}
+    k = int(hits[0])
+    return {
+        "rounds": k,
+        "uplinks": int(hist.comm_cum[k]),
+        "bytes": int(hist.bytes_cum[k]),
+        "energy_j": float(hist.energy_cum[k]),
+        "wall_clock_s": float(hist.wall_clock[k]),
+    }

@@ -5,12 +5,24 @@ from __future__ import annotations
 import jax
 
 
+def make_auto_mesh(shape, axes):
+    """jax.make_mesh with Auto axis types across jax versions.
+
+    ``axis_types`` (and ``jax.sharding.AxisType``) appeared after 0.4.x;
+    older jax meshes are implicitly Auto, so passing nothing is equivalent.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(shape))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips/pod; multi_pod stacks 2 pods = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    return make_auto_mesh(shape, axes)
 
 
 def make_local_mesh(model_parallel: int = 1, *, pods: int = 1):
@@ -23,8 +35,7 @@ def make_local_mesh(model_parallel: int = 1, *, pods: int = 1):
     else:
         shape = (n // model_parallel, model_parallel)
         axes = ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    return make_auto_mesh(shape, axes)
 
 
 def dp_axes(mesh) -> tuple:

@@ -28,7 +28,11 @@ def _axis_size(mesh, axes) -> int:
 
 def _maybe(dim: int, axes, mesh):
     if axes and dim % _axis_size(mesh, axes) == 0:
-        return axes if isinstance(axes, str) else tuple(axes)
+        if isinstance(axes, str):
+            return axes
+        # canonicalize 1-tuples to the bare name (newer jax does this inside
+        # PartitionSpec; older jax keeps the tuple — normalize for both)
+        return axes[0] if len(axes) == 1 else tuple(axes)
     return None
 
 

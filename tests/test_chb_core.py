@@ -6,6 +6,7 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need the dev deps
 from hypothesis import given, settings, strategies as st
 
 from repro.core import baselines, chb, simulator

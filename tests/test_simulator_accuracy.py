@@ -1,0 +1,101 @@
+"""Edge cases of core/simulator.py accuracy helpers and the precision-safe
+byte accounting in core/accounting.py."""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines, simulator
+from repro.core.accounting import MIB, CommStats
+from repro.data import paper_tasks
+
+
+def _history(objective, comm_cum):
+    """Minimal History with only the fields the helpers read."""
+    k = len(objective)
+    return simulator.History(
+        objective=jnp.asarray(objective, jnp.float64),
+        comm_cum=jnp.asarray(comm_cum, jnp.int64),
+        mask=jnp.zeros((k, 1)),
+        agg_grad_sqnorm=jnp.zeros((k,)),
+        final_params=None,
+        final_state=None,
+    )
+
+
+def test_iterations_to_accuracy_first_hit():
+    # err = obj - fstar = [5, 3, 0.5, 0.05, 0.2]: first < 0.1 is index 3
+    h = _history([5.0, 3.0, 0.5, 0.05, 0.2], [1, 3, 5, 6, 9])
+    assert simulator.iterations_to_accuracy(h, fstar=0.0, tol=0.1) == 3
+    assert simulator.comms_to_accuracy(h, fstar=0.0, tol=0.1) == 6
+    # the non-monotone tail must not shift the first-hit index
+    assert simulator.iterations_to_accuracy(h, fstar=0.0, tol=0.3) == 3
+
+
+def test_iterations_to_accuracy_hit_at_zero():
+    h = _history([0.01, 0.5, 0.001], [0, 2, 4])
+    assert simulator.iterations_to_accuracy(h, fstar=0.0, tol=0.1) == 0
+    assert simulator.comms_to_accuracy(h, fstar=0.0, tol=0.1) == 0
+
+
+def test_tolerance_never_reached_returns_minus_one():
+    h = _history([5.0, 4.0, 3.0], [1, 2, 3])
+    assert simulator.iterations_to_accuracy(h, fstar=0.0, tol=1e-9) == -1
+    assert simulator.comms_to_accuracy(h, fstar=0.0, tol=1e-9) == -1
+
+
+def test_strict_inequality_at_threshold():
+    """The helpers use err < tol (strict), mirroring the paper's targets."""
+    h = _history([1.0, 0.1, 0.0999], [1, 2, 3])
+    assert simulator.iterations_to_accuracy(h, fstar=0.0, tol=0.1) == 2
+
+
+def test_helpers_on_real_run():
+    b = paper_tasks.make_linear_regression(m=5, n_per=30, d=20, seed=0)
+    cfg = baselines.chb(b.alpha_paper, 5)
+    hist = simulator.run(cfg, b.task, 400)
+    fstar = float(simulator.estimate_fstar(b.task, b.alpha_paper, 20000))
+    k = simulator.iterations_to_accuracy(hist, fstar, 1e-6)
+    assert k > 0
+    assert float(hist.objective[k]) - fstar < 1e-6
+    assert float(hist.objective[k - 1]) - fstar >= 1e-6
+    assert simulator.comms_to_accuracy(hist, fstar, 1e-6) == \
+        int(hist.comm_cum[k])
+
+
+# ------------------------------------------------- precision-safe byte counts
+def test_comm_stats_bytes_exact_past_f32_cliff():
+    """Accumulating small payloads far past 2^24 bytes must stay exact —
+    the old float32 cell silently stopped registering increments there."""
+    s = CommStats.init(1)
+    payload = 65_537                       # odd size: exercises the carry
+    n = 400
+    for _ in range(n):
+        s = s.update(jnp.asarray([1.0]), payload_bytes=payload)
+    assert s.uplink_bytes_exact() == n * payload
+    assert n * payload > (1 << 24)         # the regime the fix targets
+    assert int(s.uplink_rem) < MIB
+
+
+def test_comm_stats_update_counts():
+    s = CommStats.init(4)
+    for _ in range(10):
+        s = s.update(jnp.asarray([1.0, 0.0, 1.0, 0.0]), payload_bytes=100)
+    assert int(s.total_uplinks) == 20
+    assert s.uplink_bytes_exact() == 2000
+    assert float(s.uplink_bytes) == pytest.approx(2000.0)
+    np.testing.assert_array_equal(np.asarray(s.uplink_count), [10, 0, 10, 0])
+
+
+def test_comm_stats_inside_scan_carry():
+    """The split counters must be dtype-stable through lax.scan."""
+    s0 = CommStats.init(2)
+
+    def body(s, _):
+        return s.update(jnp.asarray([1.0, 1.0]), payload_bytes=3 * MIB + 7), None
+
+    s, _ = jax.lax.scan(body, s0, None, length=50)
+    assert s.uplink_bytes_exact() == 50 * 2 * (3 * MIB + 7)
