@@ -4,10 +4,13 @@ All paper experiments run in float64 (the censoring test degenerates at the
 f32 numerical floor — see EXPERIMENTS.md) and report:
   * communications / iterations to a target objective error (Tables I, II)
   * objective-error trajectories vs comms and vs iterations (Figs. 2-12)
+
+Since PR 2 the algorithm comparisons run through ``repro.sweep``: the four
+gd/hb/lag/chb baselines are four grid points of one compiled device program
+(bit-identical to per-point ``simulator.run`` — tests/test_sweep.py), so a
+table that used to pay four compilations pays one.
 """
 from __future__ import annotations
-
-import time
 
 import jax
 
@@ -15,6 +18,7 @@ jax.config.update("jax_enable_x64", True)
 
 import numpy as np
 
+from repro import sweep
 from repro.core import baselines, simulator
 from repro.core.simulator import (FedTask, comms_to_accuracy, estimate_fstar,
                                   iterations_to_accuracy, run)
@@ -22,14 +26,10 @@ from repro.core.simulator import (FedTask, comms_to_accuracy, estimate_fstar,
 ALGOS = ["chb", "hb", "lag", "gd"]
 
 
-def compare_algorithms(bundle, num_iters: int, tol: float,
-                       alpha: float | None = None, beta: float = 0.4,
-                       eps1_scale: float = 0.1, fstar_iters: int = 40000):
-    """Run all four algorithms; return {algo: dict} with comm/iter stats."""
-    alpha = alpha if alpha is not None else bundle.alpha_paper
-    m = bundle.L_m.shape[0]
-    fstar = float(estimate_fstar(bundle.task, alpha, fstar_iters))
-    out = {"fstar": fstar}
+def algo_points(alpha: float, m: int, beta: float = 0.4,
+                eps1_scale: float = 0.1) -> dict[str, sweep.GridPoint]:
+    """The four baselines as sweep grid points (one compiled program)."""
+    out = {}
     for name in ALGOS:
         kw = {}
         if name in ("hb", "chb"):
@@ -37,21 +37,36 @@ def compare_algorithms(bundle, num_iters: int, tol: float,
         if name in ("lag", "chb"):
             kw["eps1_scale"] = eps1_scale
         cfg = baselines.ALGORITHMS[name](alpha, m, **kw)
-        t0 = time.time()
-        hist = run(cfg, bundle.task, num_iters)
-        dt = time.time() - t0
-        rec = {
+        out[name] = sweep.GridPoint(alpha=cfg.alpha, beta=cfg.beta,
+                                    eps1=cfg.eps1)
+    return out
+
+
+def compare_algorithms(bundle, num_iters: int, tol: float,
+                       alpha: float | None = None, beta: float = 0.4,
+                       eps1_scale: float = 0.1, fstar_iters: int = 40000):
+    """Run all four algorithms as one sweep; return {algo: dict} with stats."""
+    alpha = alpha if alpha is not None else bundle.alpha_paper
+    m = bundle.L_m.shape[0]
+    fstar = float(estimate_fstar(bundle.task, alpha, fstar_iters))
+    points = algo_points(alpha, m, beta=beta, eps1_scale=eps1_scale)
+    res = sweep.run_sweep(tuple(points.values()), task=bundle.task,
+                          num_iters=num_iters)
+    us = res.elapsed_s / (len(points) * num_iters) * 1e6
+    out = {"fstar": fstar}
+    for i, name in enumerate(points):
+        hist = res.history(i)
+        out[name] = {
             "iters_to_tol": iterations_to_accuracy(hist, fstar, tol),
             "comms_to_tol": comms_to_accuracy(hist, fstar, tol),
-            "total_comms": int(hist.comm_cum[-1]),
-            "final_err": float(hist.objective[-1] - fstar),
-            "final_gradsq": float(hist.agg_grad_sqnorm[-1]),
-            "us_per_iter": dt / num_iters * 1e6,
+            "total_comms": int(np.asarray(hist.comm_cum)[-1]),
+            "final_err": float(np.asarray(hist.objective)[-1] - fstar),
+            "final_gradsq": float(np.asarray(hist.agg_grad_sqnorm)[-1]),
+            "us_per_iter": us,
             "objective": np.asarray(hist.objective) - fstar,
             "comm_cum": np.asarray(hist.comm_cum),
             "mask": np.asarray(hist.mask),
         }
-        out[name] = rec
     return out
 
 

@@ -1,35 +1,48 @@
 """Fig. 10: step-size impact on communications (MNIST-scale linear
-regression): smaller alpha can SAVE communications for censored methods."""
+regression): smaller alpha can SAVE communications for censored methods.
+
+The three CHB step sizes run as one compiled sweep (eps1 follows the
+paper's eps1 = 0.1/(alpha^2 M^2) rule, so it varies with alpha)."""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
 import numpy as np
 
-from .common import compare_algorithms, csv_row
+from repro import sweep
 from repro.core import baselines, simulator
 from repro.data import paper_tasks
 
+SCALES = (1.0, 0.5, 0.25)
 
-def main() -> str:
+
+def main() -> tuple[str, dict]:
     b = paper_tasks.make_standin("mnist", "linear")
     fstar = float(simulator.estimate_fstar(b.task, b.alpha_paper, 30000))
     print("\n== Fig. 10: step size vs comms (CHB), target err = 1e-2 rel ==")
+    points = []
+    for scale in SCALES:
+        cfg = baselines.chb(b.alpha_paper * scale, 9)
+        points.append(sweep.GridPoint(alpha=cfg.alpha, beta=cfg.beta,
+                                      eps1=cfg.eps1))
+    res = sweep.run_sweep(points, task=b.task, num_iters=4000)
+    errs0 = float(np.asarray(res.history(0).objective)[0]) - fstar
+    target = 1e-2 * errs0
     rows = []
-    errs0 = None
-    for scale in [1.0, 0.5, 0.25]:
-        alpha = b.alpha_paper * scale
-        cfg = baselines.chb(alpha, 9)
-        hist = simulator.run(cfg, b.task, 4000)
-        err = np.asarray(hist.objective) - fstar
-        if errs0 is None:
-            errs0 = err[0]
-        target = 1e-2 * errs0
+    for scale, hist in zip(SCALES, res.histories):
         k = simulator.iterations_to_accuracy(hist, fstar, target)
         c = simulator.comms_to_accuracy(hist, fstar, target)
-        print(f"alpha={alpha:.3e} iters_to_target={k:5d} comms={c}")
+        print(f"alpha={scale * b.alpha_paper:.3e} iters_to_target={k:5d} "
+              f"comms={c}")
         rows.append((scale, k, c))
     # paper: smaller step size -> more iterations but can cost FEWER comms
     assert rows[2][1] > rows[0][1]
     derived = ";".join(f"a{r[0]}:comms={r[2]}" for r in rows)
-    return f"fig10_stepsize,0,{derived}"
+    payload = {"fstar": fstar, "target_err": target,
+               "rows": [{"alpha_scale": r[0], "iters_to_target": r[1],
+                         "comms_to_target": r[2]} for r in rows]}
+    return f"fig10_stepsize,0,{derived}", payload
 
 
 if __name__ == "__main__":
-    print(main())
+    print(main()[0])

@@ -3,14 +3,21 @@
 first iteration reaching each target error. CHB extracts more descent per
 uplink than censored GD, and the per-comm descent decays as the error
 target tightens (both paper observations).
+
+CHB and LAG are two points of one compiled sweep program.
 """
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
 import numpy as np
 
+from repro import sweep
 from repro.core import baselines, simulator
 from repro.data import paper_tasks
 
 
-def main() -> str:
+def main() -> tuple[str, dict]:
     b = paper_tasks.make_linear_regression()   # heterogeneous-L_m setting
     alpha = b.alpha_paper
     fstar = float(simulator.estimate_fstar(b.task, alpha, 40000))
@@ -18,15 +25,20 @@ def main() -> str:
     err0 = f0 - fstar
     levels = [1e-2 * err0, 1e-4 * err0, 1e-7 * err0]
     print("\n== Fig. 12: descent per communication vs objective error ==")
-    table = {}
-    for name in ("chb", "lag"):
+    names = ("chb", "lag")
+    points = []
+    for name in names:
         cfg = baselines.ALGORITHMS[name](alpha, 9)
-        hist = simulator.run(cfg, b.task, 3000)
+        points.append(sweep.GridPoint(alpha=cfg.alpha, beta=cfg.beta,
+                                      eps1=cfg.eps1))
+    res = sweep.run_sweep(points, task=b.task, num_iters=3000)
+    table = {}
+    for name, hist in zip(names, res.histories):
         row = []
         for lv in levels:
             c = simulator.comms_to_accuracy(hist, fstar, lv)
             k = simulator.iterations_to_accuracy(hist, fstar, lv)
-            d = (f0 - float(hist.objective[k])) / max(c, 1)
+            d = (f0 - float(np.asarray(hist.objective)[k])) / max(c, 1)
             row.append(d)
         table[name] = row
         print(f"{name:4s} " + " ".join(f"{d:.4e}" for d in row))
@@ -34,9 +46,11 @@ def main() -> str:
     for i in range(len(levels)):
         assert table["chb"][i] > table["lag"][i], (i, table)
     assert table["chb"][-1] < table["chb"][0]
+    payload = {"fstar": fstar, "error_levels": levels,
+               "descent_per_comm": table}
     return (f"fig12_descent,0,chb@1e-7={table['chb'][-1]:.3e};"
-            f"lag@1e-7={table['lag'][-1]:.3e}")
+            f"lag@1e-7={table['lag'][-1]:.3e}", payload)
 
 
 if __name__ == "__main__":
-    print(main())
+    print(main()[0])

@@ -1,52 +1,86 @@
 """Benchmark driver: one function per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--only NAME]
+  PYTHONPATH=src python -m benchmarks.run [--only NAME] [--json PATH]
 
 Prints a ``name,us_per_call,derived`` CSV line per benchmark at the end.
+``--json PATH`` additionally writes a machine-readable artifact (rows plus
+whatever structured payload each benchmark returns — trajectories,
+frontiers, speedups) so future PRs can commit ``BENCH_*.json`` files.
+
+Benchmark modules are imported lazily (module name == benchmark name), so
+``--only`` validation costs nothing and a typo'd name fails fast with the
+list of valid names instead of silently printing an empty CSV.
 """
 import argparse
+import importlib
+import json
 import sys
 import time
 import traceback
 
+BENCH_NAMES = (
+    "fig1_worker_comms",
+    "fig_edge_scenarios",
+    "fig2_linreg",
+    "fig3_logreg",
+    "table1_ijcnn",
+    "table2_small",
+    "table3_mnist",
+    "fig10_stepsize",
+    "fig11_epsilon",
+    "fig12_descent",
+    "serving",
+    "roofline",
+)
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="run a single benchmark by name")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write structured results (rows + per-benchmark "
+                         "payloads) to PATH")
     args = ap.parse_args()
 
-    from . import (fig1_worker_comms, fig2_linreg, fig3_logreg,
-                   fig10_stepsize, fig11_epsilon, fig12_descent,
-                   fig_edge_scenarios, roofline, serving, table1_ijcnn,
-                   table2_small, table3_mnist)
-    benches = [
-        ("fig1_worker_comms", fig1_worker_comms.main),
-        ("fig_edge_scenarios", fig_edge_scenarios.main),
-        ("fig2_linreg", fig2_linreg.main),
-        ("fig3_logreg", fig3_logreg.main),
-        ("table1_ijcnn", table1_ijcnn.main),
-        ("table2_small", table2_small.main),
-        ("table3_mnist", table3_mnist.main),
-        ("fig10_stepsize", fig10_stepsize.main),
-        ("fig11_epsilon", fig11_epsilon.main),
-        ("fig12_descent", fig12_descent.main),
-        ("serving", serving.main),
-        ("roofline", roofline.main),
-    ]
-    rows, failed = [], []
-    for name, fn in benches:
-        if args.only and args.only != name:
-            continue
+    if args.only is not None and args.only not in BENCH_NAMES:
+        print(f"error: unknown benchmark {args.only!r}; valid names:",
+              file=sys.stderr)
+        for n in BENCH_NAMES:
+            print(f"  {n}", file=sys.stderr)
+        raise SystemExit(2)
+
+    # every paper benchmark runs in f64 (see common.py); the old driver got
+    # this from eagerly importing common — keep it explicit under lazy import
+    import jax
+    jax.config.update("jax_enable_x64", True)
+
+    names = [args.only] if args.only else list(BENCH_NAMES)
+    rows, payloads, failed = [], {}, []
+    for name in names:
         t0 = time.time()
         try:
-            rows.append(fn())
-            print(f"[{name}] done in {time.time()-t0:.1f}s")
+            fn = importlib.import_module(f"benchmarks.{name}").main
+            out = fn()
+            if isinstance(out, tuple):
+                row, payload = out
+            else:
+                row, payload = out, {}
+            dt = time.time() - t0
+            rows.append(row)
+            payloads[name] = {"row": row, "seconds": dt, **payload}
+            print(f"[{name}] done in {dt:.1f}s")
         except Exception:
             failed.append(name)
             traceback.print_exc()
     print("\nname,us_per_call,derived")
     for r in rows:
         print(r)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"benchmarks": payloads, "failed": failed}, f,
+                      indent=1, sort_keys=True)
+        print(f"wrote {args.json}", file=sys.stderr)
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)
         raise SystemExit(1)

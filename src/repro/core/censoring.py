@@ -18,16 +18,38 @@ import jax.numpy as jnp
 from .util import tree_sqnorm
 
 
+def _eps_cast(eps1, step_sqnorm: jax.Array):
+    """Pin eps1 to the norms' dtype (f32) before the eq.-(8) product.
+
+    A static Python-float eps1 weakly promotes to the f32 of the norms, so
+    the test runs in f32; a traced eps1 arrives as a strong f64 scalar
+    under x64 and would silently promote the product (and the decision) to
+    f64 — a different censor boundary. Casting first makes the traced and
+    static paths decide identically, which the sweep engine's bit-exactness
+    contract depends on.
+    """
+    return jnp.asarray(eps1).astype(step_sqnorm.dtype)
+
+
 def skip_condition(delta_sqnorm: jax.Array, step_sqnorm: jax.Array,
                    eps1) -> jax.Array:
-    """True where the worker is CENSORED (does not transmit). Eq. (8)."""
-    return delta_sqnorm <= eps1 * step_sqnorm
+    """True where the worker is CENSORED (does not transmit). Eq. (8).
+
+    ``eps1`` may be a Python float or a traced scalar; either way the test
+    is evaluated in the norms' (f32) precision.
+    """
+    return delta_sqnorm <= _eps_cast(eps1, step_sqnorm) * step_sqnorm
 
 
 def transmit_mask(delta_sqnorm: jax.Array, step_sqnorm: jax.Array,
                   eps1) -> jax.Array:
-    """1.0 where the worker transmits, 0.0 where censored. Shape (M,)."""
-    return (delta_sqnorm > eps1 * step_sqnorm).astype(jnp.float32)
+    """1.0 where the worker transmits, 0.0 where censored. Shape (M,).
+
+    ``eps1`` may be a Python float or a traced scalar; either way the test
+    is evaluated in the norms' (f32) precision.
+    """
+    return (delta_sqnorm > _eps_cast(eps1, step_sqnorm)
+            * step_sqnorm).astype(jnp.float32)
 
 
 def delta_sqnorms(delta_stacked) -> jax.Array:

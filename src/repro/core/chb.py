@@ -22,6 +22,17 @@ Semantics are *exactly* Algorithm 1:
 
 Optionally the transmitted deltas are int8-quantized with error feedback
 (beyond paper; core/quantize.py).
+
+Traced vs. static configuration fields
+--------------------------------------
+``alpha``, ``beta``, and ``eps1`` may be *traced* jax scalars instead of
+Python floats — this is what lets ``repro.sweep`` run a whole ConfigGrid of
+(alpha, beta, eps1) points as one jitted program (``step`` switches to a
+``jnp.where``-based censor mask, which is algebraically identical to the
+static branches). Everything that changes the *structure* of the program —
+``num_workers``, ``quantize``, ``granularity``, ``bank_dtype``, ``adaptive``
+— must stay a static Python value; ``step`` raises if it sees a tracer
+where a static is required.
 """
 from __future__ import annotations
 
@@ -41,7 +52,11 @@ from .util import tree_stack_zeros, tree_sqnorm, tree_sum_leading
 
 @dataclasses.dataclass(frozen=True)
 class FedOptConfig:
-    """Configuration for the CHB family."""
+    """Configuration for the CHB family.
+
+    ``alpha``/``beta``/``eps1`` may be traced scalars (see module docstring);
+    all other fields must be static Python values.
+    """
     alpha: float
     num_workers: int
     beta: float = 0.0
@@ -66,13 +81,35 @@ class FedOptConfig:
 
     @property
     def name(self) -> str:
-        if self.eps1 > 0 and self.beta > 0:
+        ep, bp = _static_pos(self.eps1), _static_pos(self.beta)
+        if ep is None or bp is None:
+            return "swept"     # traced fields: the family is decided on-device
+        if ep and bp:
             return "chb"
-        if self.eps1 > 0:
+        if ep:
             return "lag"
-        if self.beta > 0:
+        if bp:
             return "hb"
         return "gd"
+
+
+def _static_pos(x) -> Optional[bool]:
+    """``bool(x > 0)`` for static scalars; ``None`` when ``x`` is traced."""
+    if isinstance(x, jax.core.Tracer):
+        return None
+    return bool(x > 0)
+
+
+def _scal(s, leaf: jax.Array) -> jax.Array:
+    """Pin a config scalar to a leaf's dtype before multiplying.
+
+    A static Python float weakly promotes to the leaf dtype, but a traced
+    scalar arrives strongly typed (f64 under x64) and would silently
+    promote an f32 update to f64 and double-round — a different trajectory
+    than the static path. Casting first keeps traced and static configs
+    bit-identical for every param dtype (same contract as
+    ``censoring._eps_cast``)."""
+    return jnp.asarray(s).astype(leaf.dtype)
 
 
 class FedOptState(NamedTuple):
@@ -91,6 +128,19 @@ class StepInfo(NamedTuple):
 
 
 def init(cfg: FedOptConfig, params) -> FedOptState:
+    """Build the iteration-0 state (zero bank, theta^{-1} = theta^0).
+
+    Args:
+      cfg: algorithm constants; ``num_workers``/``quantize``/``bank_dtype``/
+        ``adaptive`` must be static here (they size the state buffers).
+      params: theta^0 pytree.
+    Returns:
+      A FedOptState whose bank/error buffers have leading axis M.
+    """
+    if _static_pos(cfg.adaptive) is None:
+        raise NotImplementedError(
+            "cfg.adaptive cannot be traced: it decides whether the EMA "
+            "state buffer exists. Sweep adaptive as a static axis instead.")
     bank = tree_stack_zeros(params, cfg.num_workers)
     if cfg.bank_dtype is not None:
         bank = jax.tree_util.tree_map(
@@ -135,12 +185,23 @@ def step(cfg: FedOptConfig, state: FedOptState, params, worker_grads):
     else:
         pending = delta
 
-    if cfg.granularity == "per_tensor" and cfg.eps1 > 0:
-        return _step_per_tensor(cfg, state, params, pending)
+    if cfg.granularity == "per_tensor":
+        eps_pos = _static_pos(cfg.eps1)
+        if eps_pos is None:
+            raise NotImplementedError(
+                "per_tensor censoring needs a static eps1 (its byte "
+                "accounting divmods the payload host-side)")
+        if eps_pos:
+            return _step_per_tensor(cfg, state, params, pending)
 
     dsq = delta_sqnorms(pending)
     ssq = step_sqnorm(params, state.prev_params)
-    if cfg.adaptive > 0:
+    adaptive_on = _static_pos(cfg.adaptive)
+    if adaptive_on is None:
+        raise NotImplementedError(
+            "cfg.adaptive cannot be traced (see init); sweep it as a "
+            "static axis instead")
+    if adaptive_on:
         # relative-novelty censoring (beyond paper; see FedOptConfig)
         warm = state.ema > 0
         mask = jnp.where(warm,
@@ -149,11 +210,19 @@ def step(cfg: FedOptConfig, state: FedOptState, params, worker_grads):
         new_ema = jnp.where(warm,
                             cfg.adaptive_decay * state.ema
                             + (1 - cfg.adaptive_decay) * dsq, dsq)
-    elif cfg.eps1 > 0:
-        mask = transmit_mask(dsq, ssq, cfg.eps1)
-        new_ema = state.ema
     else:
-        mask = jnp.ones((cfg.num_workers,), jnp.float32)
+        eps_pos = _static_pos(cfg.eps1)
+        if eps_pos is None:
+            # traced eps1 (repro.sweep): branch-free select — eps1 > 0 runs
+            # the eq.-(8) test, eps1 == 0 transmits unconditionally. Bitwise
+            # identical to the static branches below for every concrete eps1.
+            mask = jnp.where(jnp.asarray(cfg.eps1) > 0,
+                             transmit_mask(dsq, ssq, cfg.eps1),
+                             jnp.ones((cfg.num_workers,), jnp.float32))
+        elif eps_pos:
+            mask = transmit_mask(dsq, ssq, cfg.eps1)
+        else:
+            mask = jnp.ones((cfg.num_workers,), jnp.float32)
         new_ema = state.ema
 
     if cfg.quantize == "int8":
@@ -179,8 +248,8 @@ def step(cfg: FedOptConfig, state: FedOptState, params, worker_grads):
 
     # eq. (4): theta^{k+1} = theta^k - alpha*grad_k + beta*(theta^k - theta^{k-1})
     new_params = jax.tree_util.tree_map(
-        lambda t, g, tp: (t - cfg.alpha * g.astype(t.dtype)
-                          + cfg.beta * (t - tp)).astype(t.dtype),
+        lambda t, g, tp: (t - _scal(cfg.alpha, t) * g.astype(t.dtype)
+                          + _scal(cfg.beta, t) * (t - tp)).astype(t.dtype),
         params, agg, state.prev_params)
 
     info = StepInfo(mask=mask, delta_sq=dsq, step_sq=ssq,
@@ -236,8 +305,8 @@ def _step_per_tensor(cfg: FedOptConfig, state: FedOptState, params, pending):
 
     agg = tree_sum_leading(new_ghat)
     new_params = jax.tree_util.tree_map(
-        lambda t, g, tp: (t - cfg.alpha * g.astype(t.dtype)
-                          + cfg.beta * (t - tp)).astype(t.dtype),
+        lambda t, g, tp: (t - _scal(cfg.alpha, t) * g.astype(t.dtype)
+                          + _scal(cfg.beta, t) * (t - tp)).astype(t.dtype),
         params, agg, state.prev_params)
     comm = CommStats(
         uplink_count=state.comm.uplink_count + any_mask.astype(jnp.int32),

@@ -5,6 +5,12 @@ model-specific logic, only (a) per-worker gradient evaluation via vmap and
 (b) the CHB-family server update. Everything is jitted with a lax.scan over
 iterations, so thousands of iterations of the paper's small problems run in
 milliseconds on CPU.
+
+``trajectory`` is the pure scan (no jit), reused by ``repro.sweep`` to run
+whole configuration grids as one compiled program; ``run`` is the one-point
+convenience wrapper that jits it. For grids of more than a couple of points,
+prefer ``repro.sweep.run_sweep`` — it compiles once for the entire grid
+instead of once per point.
 """
 from __future__ import annotations
 
@@ -32,10 +38,25 @@ class FedTask(NamedTuple):
 
 
 class History(NamedTuple):
-    objective: jax.Array       # (K,) f(theta^k)
-    comm_cum: jax.Array        # (K,) cumulative uplink transmissions
-    mask: jax.Array            # (K, M) per-iteration transmit indicators
-    agg_grad_sqnorm: jax.Array  # (K,) ||grad_k||^2
+    """Per-iteration trajectory of one Algorithm-1 run.
+
+    Attributes:
+      objective: (K,) f(theta^k) recorded *before* iteration k's update.
+      comm_cum: (K,) cumulative uplink transmissions after iteration k
+        (sum over workers of ``mask`` up to and including k).
+      mask: (K, M) per-iteration transmit indicators (1 = worker uploaded).
+        Under ``granularity="per_tensor"`` a 1 means "any tensor shipped".
+      agg_grad_sqnorm: (K,) ||sum_m ghat_m^k||^2 — the paper's nonconvex
+        progress metric, measured on the post-update bank.
+      final_params: theta^K pytree.
+      final_state: the full optimizer state after iteration K, including
+        the stale-gradient bank and the precision-safe ``CommStats``
+        (exact uplink/downlink counts and payload bytes).
+    """
+    objective: jax.Array
+    comm_cum: jax.Array
+    mask: jax.Array
+    agg_grad_sqnorm: jax.Array
     final_params: Any
     final_state: chb.FedOptState
 
@@ -47,10 +68,20 @@ def global_loss(task: FedTask, params) -> jax.Array:
     return jnp.sum(per_worker)
 
 
-def run(cfg: FedOptConfig, task: FedTask, num_iters: int,
-        jit: bool = True) -> History:
-    """Run Algorithm 1 for num_iters iterations and record the trajectory."""
+def trajectory(cfg: FedOptConfig, task: FedTask, num_iters: int) -> History:
+    """Pure (un-jitted) Algorithm-1 scan — the traceable core of ``run``.
 
+    Args:
+      cfg: algorithm constants. ``alpha``/``beta``/``eps1`` may be traced
+        scalars (see ``core/chb.py``), which is how ``repro.sweep`` maps one
+        compiled program over a whole configuration grid. Structural fields
+        (``num_workers``, ``quantize``, ...) must be static.
+      task: the distributed problem; ``init_params``/``worker_data`` leaves
+        may themselves be traced (e.g. gathered out of a stacked task bank).
+      num_iters: K, the static scan length.
+    Returns:
+      The full ``History`` of the run (see its docstring).
+    """
     worker_grads_fn = jax.vmap(task.grad_fn, in_axes=(None, 0))
 
     def one_iter(carry, _):
@@ -63,17 +94,35 @@ def run(cfg: FedOptConfig, task: FedTask, num_iters: int,
                info.agg_grad_sqnorm)
         return (new_params, new_state), rec
 
-    def scan_all(params0):
-        state0 = chb.init(cfg, params0)
-        (params, state), (obj, comms, mask, gsq) = jax.lax.scan(
-            one_iter, (params0, state0), None, length=num_iters)
-        return obj, comms, mask, gsq, params, state
-
-    fn = jax.jit(scan_all) if jit else scan_all
-    obj, comms, mask, gsq, params, state = fn(task.init_params)
+    state0 = chb.init(cfg, task.init_params)
+    (params, state), (obj, comms, mask, gsq) = jax.lax.scan(
+        one_iter, (task.init_params, state0), None, length=num_iters)
     return History(objective=obj, comm_cum=comms, mask=mask,
                    agg_grad_sqnorm=gsq, final_params=params,
                    final_state=state)
+
+
+def run(cfg: FedOptConfig, task: FedTask, num_iters: int,
+        jit: bool = True) -> History:
+    """Run Algorithm 1 for ``num_iters`` iterations on one configuration.
+
+    Args:
+      cfg: static algorithm constants (one grid point).
+      task: the distributed problem (see ``FedTask``).
+      num_iters: number of server iterations K.
+      jit: compile the scan (default); ``False`` runs eagerly for debugging.
+    Returns:
+      ``History`` — per-iteration trajectory plus the final optimizer state.
+
+    Note: each call traces and compiles afresh. Batched experiments should
+    go through ``repro.sweep.run_sweep``, which reproduces these
+    trajectories bit-exactly while compiling once for the whole grid.
+    """
+    def scan_all(params0):
+        return trajectory(cfg, task._replace(init_params=params0), num_iters)
+
+    fn = jax.jit(scan_all) if jit else scan_all
+    return fn(task.init_params)
 
 
 def estimate_fstar(task: FedTask, alpha: float, num_iters: int = 20000,

@@ -37,6 +37,20 @@ class Transmission(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class ChannelConfig:
+    """Air-interface model for every uplink/downlink transmission.
+
+    Attributes:
+      kind: ``"fixed"`` | ``"bernoulli"`` | ``"fading"`` (see module
+        docstring); a preset over the shared knobs below.
+      uplink_rate_bps: nominal worker->server bitrate.
+      downlink_rate_bps: server broadcast bitrate (deterministic,
+        lossless).
+      overhead_s: per-packet protocol overhead, charged even to zero-byte
+        censor beacons.
+      loss_prob: i.i.d. uplink loss probability in [0, 1).
+      fading_floor: minimum rate multiplier under block fading (outage
+        turns into a crawling transmission instead of a loss).
+    """
     kind: str = "fixed"             # "fixed" | "bernoulli" | "fading"
     uplink_rate_bps: float = 1e6    # nominal uplink bitrate
     downlink_rate_bps: float = 2e7  # server broadcast bitrate (fast, reliable)

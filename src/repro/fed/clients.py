@@ -32,7 +32,19 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class ClientProfile:
-    """Static description of one edge device."""
+    """Static description of one edge device.
+
+    Attributes:
+      compute_mean_s: mean seconds per local gradient evaluation.
+      jitter: latency law — ``"fixed"`` | ``"exp"`` | ``"lognormal"``
+        (see module docstring).
+      jitter_sigma: lognormal shape parameter (heavier tail when larger).
+      availability: ``"always"`` | ``"bernoulli"`` | ``"cycle"``.
+      avail_p: per-dispatch availability probability (bernoulli model).
+      cycle_period_s / cycle_duty / cycle_phase_s: square-wave on/off
+        availability trace parameters (cycle model).
+      compute_w: device power draw while computing, in watts.
+    """
     compute_mean_s: float = 1.0       # mean seconds per gradient evaluation
     jitter: str = "fixed"             # "fixed" | "exp" | "lognormal"
     jitter_sigma: float = 0.5         # lognormal shape parameter
@@ -67,7 +79,13 @@ class ClientProfile:
 
 @dataclasses.dataclass(frozen=True)
 class Population:
-    """M client profiles + the server's per-round sampling policy."""
+    """M client profiles + the server's per-round sampling policy.
+
+    Attributes:
+      profiles: one ``ClientProfile`` per client; the tuple length is M.
+      participation: fraction of the idle+available candidates the server
+        dispatches each round, in (0, 1].
+    """
     profiles: tuple[ClientProfile, ...]
     participation: float = 1.0    # fraction of idle+available clients sampled
 

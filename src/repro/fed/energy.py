@@ -24,6 +24,12 @@ class EnergyModel:
     Defaults are in the right ballpark for a WiFi/LTE-class mobile device:
     a few microjoules per transmitted byte and a few watts while computing.
     The *relative* numbers across algorithms are what the benchmarks use.
+
+    Attributes:
+      uplink_j_per_byte: radio energy per transmitted payload byte.
+      uplink_j_per_tx: fixed per-transmission radio wakeup cost (joules).
+      downlink_j_per_byte: receive energy per broadcast byte.
+      compute_w: when set, overrides every ``ClientProfile.compute_w``.
     """
     uplink_j_per_byte: float = 5e-6   # radio energy per transmitted byte
     uplink_j_per_tx: float = 1e-3     # fixed per-transmission wakeup cost

@@ -55,7 +55,18 @@ from .energy import EdgeStats, EnergyModel
 
 @dataclasses.dataclass(frozen=True)
 class EdgeConfig:
-    """Deployment scenario: who computes, over what air, at what cost."""
+    """Deployment scenario: who computes, over what air, at what cost.
+
+    Attributes:
+      population: M client profiles + the server's cohort-sampling policy.
+      channel: uplink/downlink air-time and loss model.
+      energy: radio/compute joule model for the per-client accounting.
+      quorum: fraction of the round's cohort that must report before the
+        server applies the eq.-(4) update; must be in (0, 1].
+      seed: host-side RNG seed for every latency/availability/channel draw.
+      retry_tick_s: wall-clock step used to re-poll availability when all
+        clients are idle but unavailable.
+    """
     population: Population
     channel: ChannelConfig = dataclasses.field(
         default_factory=ChannelConfig)
@@ -72,7 +83,15 @@ class EdgeConfig:
 
 
 def sync_config(num_clients: int, seed: int = 0) -> EdgeConfig:
-    """The degenerate scenario that must reproduce ``core/simulator.run``."""
+    """The degenerate scenario that must reproduce ``core/simulator.run``.
+
+    Args:
+      num_clients: M, the worker count of the task it will be run with.
+      seed: RNG seed (irrelevant in this scenario — nothing is random).
+    Returns:
+      An ``EdgeConfig`` with zero latency, a lossless infinite-rate
+      channel, full participation, and full quorum.
+    """
     return EdgeConfig(
         population=uniform_population(num_clients, compute_mean_s=0.0),
         channel=ChannelConfig.ideal(),
@@ -155,7 +174,22 @@ def _compile(cfg: FedOptConfig, task: FedTask):
 
 def run_edge(cfg: FedOptConfig, task: FedTask, edge: EdgeConfig,
              num_rounds: int) -> EdgeHistory:
-    """Run the deployment scenario for ``num_rounds`` server rounds."""
+    """Run the deployment scenario for ``num_rounds`` server rounds.
+
+    Args:
+      cfg: algorithm constants; must use ``granularity="global"`` and
+        ``adaptive=0`` (the modes the event loop implements), and its
+        ``num_workers`` must equal the population size.
+      task: the distributed problem (leaves stacked with leading axis M).
+      edge: the deployment scenario (clients, channel, energy, quorum).
+      num_rounds: number of server (eq.-4) updates to perform.
+    Returns:
+      An ``EdgeHistory`` with per-round objective/uplink/energy/wall-clock
+      trajectories and the per-client ``EdgeStats`` accounting.
+    Raises:
+      NotImplementedError: for per-tensor or adaptive censoring configs.
+      ValueError: if ``cfg.num_workers`` mismatches the population.
+    """
     if cfg.granularity != "global":
         raise NotImplementedError(
             "fed.runner supports granularity='global' only")

@@ -10,7 +10,12 @@ kernels:
   censor_select       : one pass, ghat' = transmit ? g : ghat
 
 Block shapes are (8k, 128)-aligned for f32 / (16k, 128) for bf16 VMEM tiles.
-Validated in interpret mode against kernels/ref.py.
+
+Both kernels default to ``interpret=True`` — the Pallas interpreter, which
+runs on any backend (including the CPU-only CI container) and is what the
+tier-1 suite validates against the ``kernels/ref.py`` oracles. On real TPU
+hardware pass ``interpret=False`` to lower through Mosaic and get the fused
+single-sweep performance; numerics are identical either way.
 """
 from __future__ import annotations
 

@@ -1,0 +1,22 @@
+"""repro.sweep: device-resident batched experiment engine for CHB.
+
+Every paper figure that varies a hyperparameter (stepsize, censoring
+threshold, seed) is a grid of Algorithm-1 runs. ``run_sweep`` executes an
+entire :class:`ConfigGrid` as one (or a few) compiled device programs —
+bit-exact against per-point ``core.simulator.run`` by default — and
+``run_fed_sweep`` does the same for ``repro.fed`` deployment scenarios
+(loss rate, participation, quorum) over vmappable synchronous rounds.
+
+    from repro import sweep
+    grid = sweep.ConfigGrid(alpha=(a,), beta=(0.4,),
+                            eps1_scale=(0.01, 0.1, 1.0), seed=(0, 1))
+    res = sweep.run_sweep(grid, task_factory=make_task, num_iters=3000)
+    res.frontier(fstar, tol=1e-7)      # communication/accuracy frontier
+    res.to_json("BENCH_fig11.json")
+
+See docs/sweep_guide.md for the worked tutorial.
+"""
+from .engine import SweepResult, run_sweep
+from .fed_sweep import (FedScenarioGrid, FedScenarioPoint, FedSweepResult,
+                        run_fed_sweep)
+from .grid import ConfigGrid, GridPoint

@@ -1,0 +1,295 @@
+"""Device-resident sweep engine: a whole ConfigGrid as one compiled program.
+
+Every grid point is one Algorithm-1 run (``core/simulator.trajectory``).
+Instead of re-tracing and re-jitting ``simulator.run`` per point — which is
+what made dense hyperparameter frontiers dispatch-bound — the engine:
+
+  1. partitions the grid by its *static* axes (num_workers, quantize),
+     which genuinely change the compiled program;
+  2. inside each partition, stacks the *traced* axes (alpha, beta, eps1,
+     task index) into device arrays and maps the pure trajectory over them
+     with ``lax.map`` (default) or ``vmap`` (``vectorize=True``);
+  3. jits each partition once, so a 32-point grid pays one compilation
+     instead of 32.
+
+Exactness contract: the default ``lax.map`` execution traces the per-point
+program with exactly the shapes ``simulator.run`` uses, so trajectories are
+**bit-identical** to per-point runs (asserted by tests/test_sweep.py).
+``vectorize=True`` batches the gradient matmuls across points, which is
+faster for large grids of tiny problems but perturbs float reductions by
+~1 ulp per iteration — enough to flip an occasional f32 censor decision
+near the numerical floor. Use it when throughput matters more than
+bit-reproducibility.
+
+Seeds: multiple ``seed`` values require a ``task_factory(seed, num_workers)
+-> FedTask``. Task data is closed over as program constants — exactly as
+``simulator.run`` does, which is what keeps the trajectories bit-identical
+(passing the data as a program argument, or gathering it from a stacked
+bank, perturbs XLA's matmul lowering by ~1 ulp) — so each distinct seed is
+its own compiled partition. A 16-point eps-grid over 2 seeds compiles twice
+instead of 32 times.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Any, Callable, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import simulator
+from ..core.chb import FedOptConfig
+from ..core.simulator import FedTask, History
+from .grid import ConfigGrid, GridPoint
+
+TaskFactory = Callable[[int, int], FedTask]
+
+
+def _leading_dim(task: FedTask) -> int:
+    return jax.tree_util.tree_leaves(task.worker_data)[0].shape[0]
+
+
+def _float_dtype():
+    return jnp.result_type(float)   # f64 under jax_enable_x64, else f32
+
+
+def run_sweep(grid: Union[ConfigGrid, Sequence[GridPoint]],
+              task: Optional[FedTask] = None, *,
+              num_iters: int,
+              task_factory: Optional[TaskFactory] = None,
+              base_cfg: Optional[FedOptConfig] = None,
+              vectorize: bool = False) -> "SweepResult":
+    """Run every grid point as (a few) single compiled device programs.
+
+    Args:
+      grid: a ``ConfigGrid`` or an explicit sequence of ``GridPoint``s
+        (e.g. the four gd/hb/lag/chb baselines, which are not a cartesian
+        product).
+      task: the shared ``FedTask`` when the grid has a single seed.
+      num_iters: scan length K for every point.
+      task_factory: ``(seed, num_workers) -> FedTask``; required when the
+        grid sweeps seeds or worker counts beyond the shared task.
+      base_cfg: template for config fields outside the grid axes
+        (``granularity``, ``bank_dtype``, ``adaptive``, ...); its
+        alpha/beta/eps1/num_workers/quantize are overridden per point.
+      vectorize: ``False`` (default) = ``lax.map``, bit-exact vs
+        ``simulator.run``; ``True`` = ``vmap``, faster on large grids but
+        ulp-divergent (see module docstring).
+    Returns:
+      A ``SweepResult`` with one full ``History`` per point, in grid order.
+    """
+    if task is None and task_factory is None:
+        raise ValueError("need a task or a task_factory")
+    m_default = _leading_dim(task) if task is not None else None
+    if base_cfg is not None and m_default is None:
+        m_default = base_cfg.num_workers
+    points = grid.points(m_default) if isinstance(grid, ConfigGrid) \
+        else tuple(grid)
+    if not points:
+        raise ValueError("empty grid")
+
+    # ---- partition by the static axes (worker count, quantize, seed) ----
+    groups: dict[tuple, list[int]] = {}
+    for i, p in enumerate(points):
+        m = p.num_workers if p.num_workers is not None else m_default
+        if m is None:
+            raise ValueError(
+                f"point {i} has no num_workers and no task to infer it from")
+        groups.setdefault((m, p.quantize, p.seed), []).append(i)
+
+    if task_factory is None and any(k[2] != 0 for k in groups):
+        # a shared task has no seed axis: silently running it under a
+        # non-default seed label would mislabel every result row
+        raise ValueError(
+            "non-default seeds need a task_factory(seed, num_workers)")
+
+    histories: list[Optional[History]] = [None] * len(points)
+    elapsed = 0.0
+    for (m, quant, seed), idxs in groups.items():
+        if task_factory is not None:
+            group_task = task_factory(seed, m)
+        else:
+            group_task = task
+        if group_task is None or _leading_dim(group_task) != m:
+            raise ValueError(
+                f"group needs a task with num_workers={m}; pass a "
+                "task_factory to sweep worker counts")
+        t0 = time.perf_counter()
+        group_hist = _run_group([points[i] for i in idxs], m, quant,
+                                group_task, base_cfg, num_iters, vectorize)
+        elapsed += time.perf_counter() - t0
+        for j, i in enumerate(idxs):
+            histories[i] = jax.tree_util.tree_map(lambda x: x[j], group_hist)
+    return SweepResult(points=points, num_iters=num_iters,
+                       histories=tuple(histories), elapsed_s=elapsed,
+                       num_programs=len(groups))
+
+
+def _run_group(pts: list[GridPoint], m: int, quant: Optional[str],
+               task: FedTask, base_cfg: Optional[FedOptConfig],
+               num_iters: int, vectorize: bool) -> History:
+    """Compile and execute one static partition; returns a stacked History.
+
+    The task is closed over (program constants), matching ``simulator.run``
+    bit-for-bit; only (alpha, beta, eps1) live in device arrays.
+    """
+    base = base_cfg if base_cfg is not None else \
+        FedOptConfig(alpha=0.0, num_workers=m)
+    cfg_g = dataclasses.replace(base, num_workers=m, quantize=quant)
+
+    ftype = _float_dtype()
+    pts_dev = (jnp.asarray([p.alpha for p in pts], ftype),
+               jnp.asarray([p.beta for p in pts], ftype),
+               jnp.asarray([p.eps1 for p in pts], ftype))
+
+    def one_point(point):
+        alpha, beta, eps1 = point
+        cfg = dataclasses.replace(cfg_g, alpha=alpha, beta=beta, eps1=eps1)
+        return simulator.trajectory(cfg, task, num_iters)
+
+    if vectorize:
+        program = jax.jit(jax.vmap(one_point))
+    else:
+        program = jax.jit(lambda xs: jax.lax.map(one_point, xs))
+    out = program(pts_dev)
+    jax.block_until_ready(out.objective)
+    return jax.tree_util.tree_map(np.asarray, out)
+
+
+# ---------------------------------------------------------------- results
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    """Stacked trajectories + accounting for every grid point, in order.
+
+    Attributes:
+      points: the concrete grid points, index-aligned with ``histories``.
+      num_iters: K, shared by all points.
+      histories: one host-side (numpy-leaved) ``History`` per point.
+      elapsed_s: wall-clock seconds for all device programs (compile+run).
+      num_programs: how many static partitions were compiled.
+    """
+    points: tuple[GridPoint, ...]
+    num_iters: int
+    histories: tuple[History, ...]
+    elapsed_s: float
+    num_programs: int
+
+    def __len__(self) -> int:
+        return len(self.points)
+
+    def history(self, i: int) -> History:
+        """The full per-point ``History`` (same layout as simulator.run)."""
+        return self.histories[i]
+
+    # ------------------------------------------------------ stacked views
+    @property
+    def objective(self) -> np.ndarray:
+        """(B, K) objective trajectories."""
+        return np.stack([np.asarray(h.objective) for h in self.histories])
+
+    @property
+    def comm_cum(self) -> np.ndarray:
+        """(B, K) cumulative uplink transmissions."""
+        return np.stack([np.asarray(h.comm_cum) for h in self.histories])
+
+    @property
+    def agg_grad_sqnorm(self) -> np.ndarray:
+        """(B, K) ||grad_k||^2 trajectories."""
+        return np.stack([np.asarray(h.agg_grad_sqnorm)
+                         for h in self.histories])
+
+    @property
+    def uplink_bytes(self) -> np.ndarray:
+        """(B,) exact cumulative uplink payload bytes per point."""
+        return np.asarray([h.final_state.comm.uplink_bytes_exact()
+                           for h in self.histories], np.int64)
+
+    def _fstar_for(self, fstar, i: int) -> float:
+        if isinstance(fstar, dict):
+            return float(fstar[self.points[i].seed])
+        if np.ndim(fstar) == 0:
+            return float(fstar)
+        return float(fstar[i])
+
+    def frontier(self, fstar, tol: float) -> list[dict]:
+        """Per-point communication/accuracy frontier rows.
+
+        Args:
+          fstar: optimal value — a scalar, a per-point sequence, or a
+            ``{seed: fstar}`` dict for multi-seed sweeps.
+          tol: target objective error (paper-style ``f - f* < tol``).
+        Returns:
+          One dict per point: the point's coordinates plus
+          ``iters_to_tol``/``comms_to_tol`` (-1 = never reached),
+          ``total_comms``, ``final_err``, and exact ``uplink_bytes``.
+        """
+        rows = []
+        ub = self.uplink_bytes          # (B,) once, not once per row
+        for i, (p, h) in enumerate(zip(self.points, self.histories)):
+            fs = self._fstar_for(fstar, i)
+            rows.append({
+                "index": i,
+                "algo": p.algo_name,
+                "alpha": p.alpha, "beta": p.beta, "eps1": p.eps1,
+                "seed": p.seed, "quantize": p.quantize,
+                "num_workers": int(np.asarray(h.mask).shape[1]),
+                "iters_to_tol": simulator.iterations_to_accuracy(h, fs, tol),
+                "comms_to_tol": simulator.comms_to_accuracy(h, fs, tol),
+                "total_comms": int(np.asarray(h.comm_cum)[-1]),
+                "final_err": float(np.asarray(h.objective)[-1]) - fs,
+                "uplink_bytes": int(ub[i]),
+            })
+        return rows
+
+    # ----------------------------------------------------------- export
+    def to_json(self, path: Optional[str] = None,
+                include_trajectories: bool = True,
+                fstar=None, tol: Optional[float] = None) -> str:
+        """Serialize the sweep for BENCH artifacts.
+
+        Args:
+          path: if given, also write the JSON there.
+          include_trajectories: include (B, K) objective/comm trajectories
+            (masks are always omitted — they dominate the payload).
+          fstar, tol: if both given, a ``frontier`` section is included.
+        Returns:
+          The JSON string.
+        """
+        doc: dict[str, Any] = {
+            "num_points": len(self.points),
+            "num_iters": self.num_iters,
+            "num_programs": self.num_programs,
+            "elapsed_s": self.elapsed_s,
+            "points": [p._asdict() for p in self.points],
+            "uplink_bytes": self.uplink_bytes.tolist(),
+        }
+        if include_trajectories:
+            doc["objective"] = self.objective.tolist()
+            doc["comm_cum"] = self.comm_cum.tolist()
+        if fstar is not None and tol is not None:
+            doc["frontier"] = self.frontier(fstar, tol)
+        text = json.dumps(doc, indent=1, sort_keys=True)
+        if path is not None:
+            with open(path, "w") as f:
+                f.write(text)
+        return text
+
+    def to_csv(self, fstar, tol: float, path: Optional[str] = None) -> str:
+        """Frontier rows as CSV (header + one line per point)."""
+        rows = self.frontier(fstar, tol)
+        cols = ["index", "algo", "alpha", "beta", "eps1", "seed", "quantize",
+                "num_workers", "iters_to_tol", "comms_to_tol", "total_comms",
+                "final_err", "uplink_bytes"]
+        lines = [",".join(cols)]
+        for r in rows:
+            lines.append(",".join(
+                "" if r[c] is None else f"{r[c]:.6e}" if c == "final_err"
+                else str(r[c]) for c in cols))
+        text = "\n".join(lines) + "\n"
+        if path is not None:
+            with open(path, "w") as f:
+                f.write(text)
+        return text

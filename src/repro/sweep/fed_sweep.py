@@ -1,0 +1,279 @@
+"""Edge-scenario sweeps: repro.fed deployment knobs as one device program.
+
+The event-driven runtime (``repro.fed.runner``) is host-side Python — ideal
+for wall-clock fidelity, hopeless for dense scenario grids. This module
+models the same deployment knobs in *vmappable synchronous rounds* so a
+whole (loss rate × participation × quorum × seed) grid runs as a single
+jitted scan, sharing the engine's partition/export machinery.
+
+Synchronous-round semantics (each a documented simplification of the event
+runtime, reducing to it exactly in the ideal case):
+
+  * participation — each client independently joins the round's cohort with
+    probability ``participation`` (the event runtime samples a fixed-size
+    cohort; i.i.d. Bernoulli is the vmappable analogue).
+  * censoring — cohort members apply the exact eq.-(8) test against the
+    current step norm, as in ``chb.step``.
+  * loss — each transmission drops i.i.d. with ``loss_prob``; a dropped
+    uplink costs air bytes/energy but leaves the server bank and quorum
+    count untouched (censored zero-byte beacons do count toward quorum).
+  * quorum — the server applies the eq.-(4) update only when
+    ``#arrived >= ceil(quorum * #cohort)``; a failed round folds any
+    delivered deltas into the bank (they arrived) but freezes theta.
+
+Correctness anchor (tests/test_fed_sweep in tests/test_sweep.py): the ideal
+point (loss 0, participation 1, quorum 1) reproduces
+``core/simulator.run`` trajectories bit-exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import json
+from typing import Any, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.censoring import delta_sqnorms, step_sqnorm, transmit_mask
+from ..core.chb import FedOptConfig, _bcast
+from ..core.quantize import payload_bytes_dense
+from ..core.simulator import FedTask, global_loss
+from ..core.util import tree_sqnorm, tree_stack_zeros, tree_sum_leading
+from ..fed.energy import EnergyModel
+
+
+class FedScenarioPoint(NamedTuple):
+    """One deployment scenario inside a fed sweep.
+
+    Attributes:
+      loss_prob: i.i.d. uplink drop probability.
+      participation: per-client per-round cohort-join probability.
+      quorum: fraction of the cohort that must arrive before theta advances.
+      seed: PRNG seed for the scenario's participation/loss draws.
+    """
+    loss_prob: float = 0.0
+    participation: float = 1.0
+    quorum: float = 1.0
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class FedScenarioGrid:
+    """Cartesian product over deployment knobs (all traced axes).
+
+    Args:
+      loss_prob / participation / quorum / seed: axis values; the product
+        is enumerated row-major in this field order.
+    """
+    loss_prob: Sequence[float] = (0.0,)
+    participation: Sequence[float] = (1.0,)
+    quorum: Sequence[float] = (1.0,)
+    seed: Sequence[int] = (0,)
+
+    def points(self) -> tuple[FedScenarioPoint, ...]:
+        return tuple(
+            FedScenarioPoint(float(l), float(p), float(q), int(s))
+            for l, p, q, s in itertools.product(
+                self.loss_prob, self.participation, self.quorum, self.seed))
+
+
+def run_fed_sweep(cfg: FedOptConfig, task: FedTask,
+                  grid, num_rounds: int, *,
+                  energy: Optional[EnergyModel] = None,
+                  vectorize: bool = False) -> "FedSweepResult":
+    """Sweep deployment scenarios for one algorithm as one device program.
+
+    Args:
+      cfg: the (static) algorithm configuration shared by every scenario;
+        must use ``quantize=None``, ``granularity="global"``, ``adaptive=0``
+        (the modes the synchronous-round model covers).
+      task: the distributed problem.
+      grid: a ``FedScenarioGrid`` or explicit ``FedScenarioPoint`` sequence.
+      num_rounds: synchronous server rounds R per scenario.
+      energy: radio/compute energy model for the per-point accounting
+        (defaults to ``fed.EnergyModel()``).
+      vectorize: as in ``run_sweep`` — ``False`` (lax.map) keeps the ideal
+        point bit-exact vs ``simulator.run``; ``True`` batches for speed.
+    Returns:
+      A ``FedSweepResult`` with objective/uplink/bytes/energy trajectories
+      per scenario.
+    """
+    if cfg.quantize is not None:
+        raise NotImplementedError("fed sweep supports quantize=None only")
+    if cfg.granularity != "global":
+        raise NotImplementedError("fed sweep supports granularity='global'")
+    if cfg.adaptive > 0:
+        raise NotImplementedError("fed sweep does not cover adaptive mode")
+    points = grid.points() if isinstance(grid, FedScenarioGrid) \
+        else tuple(grid)
+    m = jax.tree_util.tree_leaves(task.worker_data)[0].shape[0]
+    if cfg.num_workers != m:
+        raise ValueError(f"cfg.num_workers={cfg.num_workers} != task M={m}")
+    energy = energy if energy is not None else EnergyModel()
+
+    worker_grads_fn = jax.vmap(task.grad_fn, in_axes=(None, 0))
+
+    def one_scenario(point):
+        loss_p, part, quo, seed = point
+
+        def one_round(carry, _):
+            params, prev, ghat, key = carry
+            key, k_part, k_drop = jax.random.split(key, 3)
+            participate = (jax.random.uniform(k_part, (m,)) < part
+                           ).astype(jnp.float32)
+            grads = worker_grads_fn(params, task.worker_data)
+            delta = jax.tree_util.tree_map(
+                lambda g, h: g.astype(h.dtype) - h, grads, ghat)
+            dsq = delta_sqnorms(delta)
+            ssq = step_sqnorm(params, prev)
+            censor_pass = transmit_mask(dsq, ssq, cfg.eps1) \
+                if cfg.eps1 > 0 else jnp.ones((m,), jnp.float32)
+            transmit = participate * censor_pass
+            dropped = (jax.random.uniform(k_drop, (m,)) < loss_p
+                       ).astype(jnp.float32) * transmit
+            delivered = transmit - dropped
+            # deliveries always fold (eq. 5 stale-bank semantics); quorum
+            # only gates the theta update, exactly like the event runtime
+            new_ghat = jax.tree_util.tree_map(
+                lambda h, q: h + _bcast(delivered, h) * q.astype(h.dtype),
+                ghat, delta)
+            agg = tree_sum_leading(new_ghat)
+            upd = jax.tree_util.tree_map(
+                lambda t, g, tp: (t - cfg.alpha * g.astype(t.dtype)
+                                  + cfg.beta * (t - tp)).astype(t.dtype),
+                params, agg, prev)
+            arrived = participate - dropped     # beacons count, drops don't
+            cohort = jnp.sum(participate)
+            met = (jnp.sum(arrived) >= jnp.ceil(quo * cohort)) & (cohort > 0)
+            new_params = jax.tree_util.tree_map(
+                lambda u, t: jnp.where(met, u, t), upd, params)
+            new_prev = jax.tree_util.tree_map(
+                lambda t, tp: jnp.where(met, t, tp), params, prev)
+            rec = (global_loss(task, params), tree_sqnorm(agg),
+                   transmit.astype(jnp.int8), delivered.astype(jnp.int8),
+                   participate.astype(jnp.int8), met)
+            return (new_params, new_prev, new_ghat, key), rec
+
+        p0 = task.init_params
+        ghat0 = tree_stack_zeros(p0, m)
+        key0 = jax.random.PRNGKey(seed)
+        _, recs = jax.lax.scan(
+            one_round, (p0, p0, ghat0, key0), None, length=num_rounds)
+        return recs
+
+    ftype = jnp.result_type(float)
+    pts_dev = (jnp.asarray([p.loss_prob for p in points], ftype),
+               jnp.asarray([p.participation for p in points], ftype),
+               jnp.asarray([p.quorum for p in points], ftype),
+               jnp.asarray([p.seed for p in points], jnp.uint32))
+    if vectorize:
+        program = jax.jit(jax.vmap(one_scenario))
+    else:
+        program = jax.jit(lambda xs: jax.lax.map(one_scenario, xs))
+    obj, gsq, transmit, delivered, participate, met = \
+        jax.tree_util.tree_map(np.asarray, program(pts_dev))
+
+    # uplink and downlink ship the same dense parameter payload here
+    payload = payload_bytes_dense(task.init_params)
+    attempted = transmit.astype(np.int64).sum(axis=2)        # (B, R)
+    cohort = participate.astype(np.int64).sum(axis=2)
+    energy_per_round = (attempted * energy.tx_energy(payload)
+                        + cohort * energy.rx_energy(payload))
+    return FedSweepResult(
+        points=points, num_rounds=num_rounds,
+        objective=obj, agg_grad_sqnorm=gsq,
+        transmit_mask=transmit, delivered_mask=delivered,
+        participate_mask=participate, quorum_met=met,
+        comm_cum=np.cumsum(attempted, axis=1),
+        delivered_cum=np.cumsum(delivered.astype(np.int64).sum(axis=2),
+                                axis=1),
+        bytes_cum=np.cumsum(attempted * payload, axis=1),
+        energy_cum=np.cumsum(energy_per_round, axis=1),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class FedSweepResult:
+    """Per-scenario synchronous-round trajectories and edge accounting.
+
+    Attributes:
+      points: scenario coordinates, index-aligned with every array below.
+      num_rounds: R.
+      objective: (B, R) f(theta^k) before each round's update.
+      agg_grad_sqnorm: (B, R) ||sum_m ghat_m||^2 at each update.
+      transmit_mask / delivered_mask / participate_mask: (B, R, M) int8
+        per-round indicators (attempted uplink / survived the channel /
+        joined the cohort).
+      quorum_met: (B, R) whether the round's theta update was applied.
+      comm_cum / delivered_cum: (B, R) cumulative attempted / delivered
+        uplinks.
+      bytes_cum: (B, R) cumulative attempted uplink payload bytes (drops
+        still burn air bytes).
+      energy_cum: (B, R) cumulative radio joules (tx per attempt + rx per
+        cohort member).
+    """
+    points: tuple[FedScenarioPoint, ...]
+    num_rounds: int
+    objective: np.ndarray
+    agg_grad_sqnorm: np.ndarray
+    transmit_mask: np.ndarray
+    delivered_mask: np.ndarray
+    participate_mask: np.ndarray
+    quorum_met: np.ndarray
+    comm_cum: np.ndarray
+    delivered_cum: np.ndarray
+    bytes_cum: np.ndarray
+    energy_cum: np.ndarray
+
+    def __len__(self) -> int:
+        return len(self.points)
+
+    def frontier(self, fstar: float, tol: float) -> list[dict]:
+        """Edge frontier rows: rounds/uplinks/bytes/joules to accuracy.
+
+        Args:
+          fstar: optimal objective value.
+          tol: target error; -1 entries mean the target was never reached.
+        Returns:
+          One dict per scenario, mirroring
+          ``fed.runner.edge_metrics_to_accuracy``.
+        """
+        rows = []
+        for i, p in enumerate(self.points):
+            err = self.objective[i] - fstar
+            hits = np.nonzero(err < tol)[0]
+            if hits.size == 0:
+                rec = {"rounds": -1, "uplinks": -1, "bytes": -1,
+                       "energy_j": -1.0}
+            else:
+                k = int(hits[0])
+                rec = {"rounds": k,
+                       "uplinks": int(self.comm_cum[i, k]),
+                       "bytes": int(self.bytes_cum[i, k]),
+                       "energy_j": float(self.energy_cum[i, k])}
+            rows.append({"index": i, **p._asdict(), **rec,
+                         "final_err": float(err[-1])})
+        return rows
+
+    def to_json(self, path: Optional[str] = None,
+                fstar: Optional[float] = None,
+                tol: Optional[float] = None) -> str:
+        """Serialize scenario trajectories (and optionally the frontier)."""
+        doc: dict[str, Any] = {
+            "num_points": len(self.points),
+            "num_rounds": self.num_rounds,
+            "points": [p._asdict() for p in self.points],
+            "objective": self.objective.tolist(),
+            "comm_cum": self.comm_cum.tolist(),
+            "bytes_cum": self.bytes_cum.tolist(),
+            "energy_cum": self.energy_cum.tolist(),
+        }
+        if fstar is not None and tol is not None:
+            doc["frontier"] = self.frontier(fstar, tol)
+        text = json.dumps(doc, indent=1, sort_keys=True)
+        if path is not None:
+            with open(path, "w") as f:
+                f.write(text)
+        return text

@@ -1,0 +1,132 @@
+"""Configuration grids for batched CHB experiments.
+
+A :class:`ConfigGrid` describes a cartesian product over the CHB family's
+hyperparameters — step size alpha, momentum beta, censoring threshold eps1
+(absolute, or relative via the paper's eps1 = scale/(alpha^2 M^2) rule),
+task PRNG seed, quantization mode, and worker count M. ``grid.points()``
+enumerates it into concrete :class:`GridPoint` tuples, which is what
+``repro.sweep.run_sweep`` consumes.
+
+Axes fall into two classes (see ``core/chb.py``):
+
+  * **traced axes** — ``alpha``, ``beta``, ``eps1``/``eps1_scale``, ``seed``.
+    Points differing only here run inside ONE compiled program.
+  * **static axes** — ``quantize`` and ``num_workers`` change the compiled
+    program's structure; the engine partitions the grid into one compiled
+    group per distinct (num_workers, quantize) pair.
+
+Point order is the row-major cartesian product in field order
+(alpha, beta, eps, seed, quantize, num_workers) — stable, so sweep results
+can be reshaped back into the grid's axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import NamedTuple, Optional, Sequence
+
+from ..core.censoring import paper_eps1
+
+
+class GridPoint(NamedTuple):
+    """One concrete experiment configuration inside a sweep.
+
+    Attributes:
+      alpha: step size.
+      beta: heavy-ball momentum (0 => GD/LAG family).
+      eps1: absolute censoring threshold (0 => no censoring).
+      seed: task PRNG seed — selects which stacked task instance the point
+        runs on (data generation happens host-side in the task factory).
+      quantize: ``None`` or ``"int8"`` (static axis).
+      num_workers: M, or ``None`` to inherit the task's worker count.
+    """
+    alpha: float
+    beta: float = 0.0
+    eps1: float = 0.0
+    seed: int = 0
+    quantize: Optional[str] = None
+    num_workers: Optional[int] = None
+
+    @property
+    def algo_name(self) -> str:
+        """gd/hb/lag/chb classification of this point (paper Sec. II)."""
+        if self.eps1 > 0 and self.beta > 0:
+            return "chb"
+        if self.eps1 > 0:
+            return "lag"
+        if self.beta > 0:
+            return "hb"
+        return "gd"
+
+
+@dataclasses.dataclass(frozen=True)
+class ConfigGrid:
+    """Cartesian product over CHB hyperparameters.
+
+    Exactly one of ``eps1`` (absolute thresholds) or ``eps1_scale``
+    (relative: resolved per point as ``scale / (alpha^2 M^2)``, the paper's
+    Sec.-IV practical rule) may be given; omitting both means no censoring.
+
+    Args:
+      alpha: step sizes to sweep (required, at least one).
+      beta: momentum values.
+      eps1: absolute censoring thresholds.
+      eps1_scale: relative thresholds (mutually exclusive with ``eps1``).
+      seed: task-generation seeds; more than one seed requires a
+        ``task_factory`` at ``run_sweep`` time.
+      quantize: quantization modes (``None`` | ``"int8"``), a static axis.
+      num_workers: worker counts, a static axis; ``(None,)`` inherits the
+        task's M.
+    """
+    alpha: Sequence[float]
+    beta: Sequence[float] = (0.0,)
+    eps1: Optional[Sequence[float]] = None
+    eps1_scale: Optional[Sequence[float]] = None
+    seed: Sequence[int] = (0,)
+    quantize: Sequence[Optional[str]] = (None,)
+    num_workers: Sequence[Optional[int]] = (None,)
+
+    def __post_init__(self):
+        if self.eps1 is not None and self.eps1_scale is not None:
+            raise ValueError("give eps1 or eps1_scale, not both")
+        if not self.alpha:
+            raise ValueError("alpha axis must have at least one value")
+        for q in self.quantize:
+            if q not in (None, "int8"):
+                raise ValueError(f"unknown quantize mode {q!r}")
+
+    @property
+    def num_points(self) -> int:
+        eps = self.eps1 if self.eps1 is not None else \
+            self.eps1_scale if self.eps1_scale is not None else (0.0,)
+        return (len(self.alpha) * len(self.beta) * len(eps) * len(self.seed)
+                * len(self.quantize) * len(self.num_workers))
+
+    def points(self, default_num_workers: Optional[int] = None
+               ) -> tuple[GridPoint, ...]:
+        """Enumerate the grid (row-major in declared field order).
+
+        Args:
+          default_num_workers: M used to resolve ``eps1_scale`` for points
+            whose ``num_workers`` axis value is ``None``.
+        Returns:
+          Tuple of concrete ``GridPoint``s, ``self.num_points`` long.
+        """
+        relative = self.eps1_scale is not None
+        eps = self.eps1 if self.eps1 is not None else \
+            self.eps1_scale if relative else (0.0,)
+        out = []
+        for a, b, e, s, q, m in itertools.product(
+                self.alpha, self.beta, eps, self.seed, self.quantize,
+                self.num_workers):
+            m_eff = m if m is not None else default_num_workers
+            if relative:
+                if m_eff is None:
+                    raise ValueError(
+                        "eps1_scale needs num_workers (in the grid or via "
+                        "default_num_workers) to resolve the threshold")
+                e = paper_eps1(a, m_eff, e)
+            out.append(GridPoint(alpha=float(a), beta=float(b),
+                                 eps1=float(e), seed=int(s), quantize=q,
+                                 num_workers=m))
+        return tuple(out)
