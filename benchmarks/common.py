@@ -7,8 +7,12 @@ f32 numerical floor — see EXPERIMENTS.md) and report:
 
 Since PR 2 the algorithm comparisons run through ``repro.sweep``: the four
 gd/hb/lag/chb baselines are four grid points of one compiled device program
-(bit-identical to per-point ``simulator.run`` — tests/test_sweep.py), so a
-table that used to pay four compilations pays one.
+(bit-identical to per-point ``simulator.run`` — tests/test_sweep.py).
+Since PR 3 they are built through the ``repro.opt`` registry, the fifth
+curve is ``csgd`` (stochastic censoring, arXiv:1909.03631 — a pure
+composition of existing stages), and every result row carries the full
+registry spec so ``--json`` artifacts are reproducible from the artifact
+alone (``opt.from_spec(row["spec"])`` rebuilds the exact optimizer).
 """
 from __future__ import annotations
 
@@ -18,38 +22,69 @@ jax.config.update("jax_enable_x64", True)
 
 import numpy as np
 
-from repro import sweep
-from repro.core import baselines, simulator
+from repro import opt, sweep
+from repro.core.censoring import delta_sqnorms
 from repro.core.simulator import (FedTask, comms_to_accuracy, estimate_fstar,
-                                  iterations_to_accuracy, run)
+                                  iterations_to_accuracy)
 
-ALGOS = ["chb", "hb", "lag", "gd"]
+ALGOS = ["chb", "hb", "lag", "gd", "csgd"]
+
+
+def csgd_tau0(task: FedTask) -> float:
+    """A task-scaled initial threshold for the CSGD decaying sequence.
+
+    CSGD censors ``||delta||^2`` against an absolute threshold, so unlike
+    the paper's eq. (8) (which self-scales through ``||dtheta||^2``) it
+    needs to know the problem's gradient scale. The median worker's
+    squared gradient norm at theta^0 puts the initial transmit probability
+    ``min(1, ||delta||^2/tau_0)`` around 1 for the high-curvature half of
+    the cohort.
+    """
+    g0 = jax.vmap(task.grad_fn, in_axes=(None, 0))(task.init_params,
+                                                   task.worker_data)
+    return float(np.median(np.asarray(delta_sqnorms(g0))))
 
 
 def algo_points(alpha: float, m: int, beta: float = 0.4,
-                eps1_scale: float = 0.1) -> dict[str, sweep.GridPoint]:
-    """The four baselines as sweep grid points (one compiled program)."""
+                eps1_scale: float = 0.1,
+                tau0: float | None = None) -> dict[str, sweep.GridPoint]:
+    """The five benchmark algorithms as registry-built sweep grid points.
+
+    gd/hb/lag/chb share one compiled program (the eq.-8/heavy-ball
+    continuum); csgd compiles as its own partition and is only included
+    when a task-scaled ``tau0`` is given (see ``csgd_tau0``).
+    """
     out = {}
     for name in ALGOS:
+        if name == "csgd":
+            if tau0 is None:
+                continue
+            out[name] = sweep.GridPoint(alpha=alpha, eps1=tau0, algo="csgd")
+            continue
         kw = {}
         if name in ("hb", "chb"):
             kw["beta"] = beta
         if name in ("lag", "chb"):
             kw["eps1_scale"] = eps1_scale
-        cfg = baselines.ALGORITHMS[name](alpha, m, **kw)
-        out[name] = sweep.GridPoint(alpha=cfg.alpha, beta=cfg.beta,
-                                    eps1=cfg.eps1)
+        o = opt.make(name, alpha, m, **kw)
+        out[name] = sweep.GridPoint(alpha=o.alpha, beta=o.beta, eps1=o.eps1)
     return out
 
 
 def compare_algorithms(bundle, num_iters: int, tol: float,
                        alpha: float | None = None, beta: float = 0.4,
                        eps1_scale: float = 0.1, fstar_iters: int = 40000):
-    """Run all four algorithms as one sweep; return {algo: dict} with stats."""
+    """Run all five algorithms as one sweep; return {algo: dict} with stats.
+
+    Each algorithm's dict includes its full registry ``spec``
+    (``opt.from_spec``-able), so exported artifacts identify the exact
+    composition, not just a name.
+    """
     alpha = alpha if alpha is not None else bundle.alpha_paper
     m = bundle.L_m.shape[0]
     fstar = float(estimate_fstar(bundle.task, alpha, fstar_iters))
-    points = algo_points(alpha, m, beta=beta, eps1_scale=eps1_scale)
+    points = algo_points(alpha, m, beta=beta, eps1_scale=eps1_scale,
+                         tau0=csgd_tau0(bundle.task))
     res = sweep.run_sweep(tuple(points.values()), task=bundle.task,
                           num_iters=num_iters)
     us = res.elapsed_s / (len(points) * num_iters) * 1e6
@@ -63,6 +98,7 @@ def compare_algorithms(bundle, num_iters: int, tol: float,
             "final_err": float(np.asarray(hist.objective)[-1] - fstar),
             "final_gradsq": float(np.asarray(hist.agg_grad_sqnorm)[-1]),
             "us_per_iter": us,
+            "spec": res.specs[i],
             "objective": np.asarray(hist.objective) - fstar,
             "comm_cum": np.asarray(hist.comm_cum),
             "mask": np.asarray(hist.mask),
@@ -76,9 +112,16 @@ def print_table(title: str, results: dict, metric_keys=("comms_to_tol",
     hdr = "algo".ljust(6) + "".join(k.rjust(16) for k in metric_keys)
     print(hdr)
     for a in ALGOS:
+        if a not in results:
+            continue
         row = a.ljust(6) + "".join(
             str(results[a][k]).rjust(16) for k in metric_keys)
         print(row)
+
+
+def specs_payload(results: dict) -> dict:
+    """The {algo: registry spec} section for --json artifacts."""
+    return {a: results[a]["spec"] for a in ALGOS if a in results}
 
 
 def csv_row(name: str, results: dict, derived: str) -> str:

@@ -9,8 +9,8 @@ jax.config.update("jax_enable_x64", True)
 
 import numpy as np
 
-from repro import sweep
-from repro.core import baselines, simulator
+from repro import opt, sweep
+from repro.core import simulator
 from repro.data import paper_tasks
 
 SCALES = (1.0, 0.5, 0.25)
@@ -22,9 +22,9 @@ def main() -> tuple[str, dict]:
     print("\n== Fig. 10: step size vs comms (CHB), target err = 1e-2 rel ==")
     points = []
     for scale in SCALES:
-        cfg = baselines.chb(b.alpha_paper * scale, 9)
-        points.append(sweep.GridPoint(alpha=cfg.alpha, beta=cfg.beta,
-                                      eps1=cfg.eps1))
+        o = opt.make("chb", b.alpha_paper * scale, 9)
+        points.append(sweep.GridPoint(alpha=o.alpha, beta=o.beta,
+                                      eps1=o.eps1))
     res = sweep.run_sweep(points, task=b.task, num_iters=4000)
     errs0 = float(np.asarray(res.history(0).objective)[0]) - fstar
     target = 1e-2 * errs0

@@ -21,9 +21,8 @@ jax.config.update("jax_enable_x64", True)
 
 import numpy as np
 
-from repro import sweep
+from repro import opt, sweep
 from repro.core import simulator
-from repro.core.chb import FedOptConfig
 from repro.data import paper_tasks
 
 SCALES = tuple(float(s) for s in np.logspace(-2.0, 0.0, 33))
@@ -52,9 +51,10 @@ def main() -> tuple[str, dict]:
     tasks = {s: _task_factory(s, M) for s in SEEDS}
     t0 = time.perf_counter()
     for p in res.points:
-        cfg = FedOptConfig(alpha=p.alpha, beta=p.beta, eps1=p.eps1,
-                           num_workers=M)
-        hist = simulator.run(cfg, tasks[p.seed], NUM_ITERS)
+        o = opt.ComposedOptimizer(
+            censor=opt.Eq8Censor(p.eps1), transport=opt.DenseTransport(),
+            server=opt.HeavyBall(p.alpha, p.beta), num_workers=M)
+        hist = simulator.run(o, tasks[p.seed], NUM_ITERS)
         hist.objective.block_until_ready()
     t_loop = time.perf_counter() - t0
     speedup = t_loop / res.elapsed_s

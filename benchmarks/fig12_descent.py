@@ -12,8 +12,8 @@ jax.config.update("jax_enable_x64", True)
 
 import numpy as np
 
-from repro import sweep
-from repro.core import baselines, simulator
+from repro import opt, sweep
+from repro.core import simulator
 from repro.data import paper_tasks
 
 
@@ -28,9 +28,9 @@ def main() -> tuple[str, dict]:
     names = ("chb", "lag")
     points = []
     for name in names:
-        cfg = baselines.ALGORITHMS[name](alpha, 9)
-        points.append(sweep.GridPoint(alpha=cfg.alpha, beta=cfg.beta,
-                                      eps1=cfg.eps1))
+        o = opt.make(name, alpha, 9)
+        points.append(sweep.GridPoint(alpha=o.alpha, beta=o.beta,
+                                      eps1=o.eps1))
     res = sweep.run_sweep(points, task=b.task, num_iters=3000)
     table = {}
     for name, hist in zip(names, res.histories):

@@ -1,24 +1,27 @@
 """Fig. 2: objective error vs comms and iterations — linear regression,
 synthetic, increasing L_m (the paper's headline synthetic comparison)."""
-from .common import compare_algorithms, csv_row, print_table
+from .common import compare_algorithms, csv_row, print_table, specs_payload
 from repro.data import paper_tasks
 
 
-def main() -> str:
+def main():
     b = paper_tasks.make_linear_regression()
     res = compare_algorithms(b, num_iters=3000, tol=1e-7)
     print_table("Fig. 2: linreg synthetic (tol 1e-7)", res)
     chb, hb = res["chb"], res["hb"]
-    lag, gd = res["lag"], res["gd"]
+    lag = res["lag"]
     # paper claims: CHB fewest comms; iterations ~ HB; beats LAG on both
     assert chb["comms_to_tol"] < hb["comms_to_tol"]
     assert chb["comms_to_tol"] < lag["comms_to_tol"]
     assert chb["iters_to_tol"] <= lag["iters_to_tol"]
     ratio = hb["comms_to_tol"] / chb["comms_to_tol"]
-    return csv_row("fig2_linreg", res,
-                   f"chb_comms={chb['comms_to_tol']};hb_comms="
-                   f"{hb['comms_to_tol']};saving_x={ratio:.2f}")
+    row = csv_row("fig2_linreg", res,
+                  f"chb_comms={chb['comms_to_tol']};hb_comms="
+                  f"{hb['comms_to_tol']};saving_x={ratio:.2f}")
+    return row, {"specs": specs_payload(res),
+                 "comms_to_tol": {a: res[a]["comms_to_tol"]
+                                  for a in specs_payload(res)}}
 
 
 if __name__ == "__main__":
-    print(main())
+    print(main()[0])

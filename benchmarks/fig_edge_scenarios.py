@@ -21,7 +21,8 @@ import jax
 
 jax.config.update("jax_enable_x64", True)   # paper experiments run in f64
 
-from repro.core import baselines, simulator
+from repro import opt
+from repro.core import simulator
 from repro.data import paper_tasks
 from repro import fed
 
@@ -79,8 +80,7 @@ def main(rounds: int = 600) -> str:
         print("\n" + hdr)
         per_algo = {}
         for algo in ALGOS:
-            cfg = baselines.ALGORITHMS[algo](
-                bundle.alpha_paper * sc["alpha_scale"], m)
+            cfg = opt.make(algo, bundle.alpha_paper * sc["alpha_scale"], m)
             hist = fed.run_edge(cfg, bundle.task, sc["edge"](seed=17),
                                 rounds)
             met = fed.edge_metrics_to_accuracy(hist, fstar, tol)

@@ -11,7 +11,6 @@ see that module's docstring).
 """
 import glob
 import json
-import math
 import os
 
 PEAK_FLOPS = 197e12

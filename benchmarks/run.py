@@ -5,7 +5,9 @@
 Prints a ``name,us_per_call,derived`` CSV line per benchmark at the end.
 ``--json PATH`` additionally writes a machine-readable artifact (rows plus
 whatever structured payload each benchmark returns — trajectories,
-frontiers, speedups) so future PRs can commit ``BENCH_*.json`` files.
+frontiers, speedups, and the full ``repro.opt`` registry spec of every
+algorithm, so a result is reproducible from the artifact alone via
+``opt.from_spec``) so future PRs can commit ``BENCH_*.json`` files.
 
 Benchmark modules are imported lazily (module name == benchmark name), so
 ``--only`` validation costs nothing and a typo'd name fails fast with the
@@ -77,9 +79,11 @@ def main() -> None:
     for r in rows:
         print(r)
     if args.json:
+        from repro import opt
+        doc = {"benchmarks": payloads, "failed": failed,
+               "registry": list(opt.names())}
         with open(args.json, "w") as f:
-            json.dump({"benchmarks": payloads, "failed": failed}, f,
-                      indent=1, sort_keys=True)
+            json.dump(doc, f, indent=1, sort_keys=True)
         print(f"wrote {args.json}", file=sys.stderr)
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)

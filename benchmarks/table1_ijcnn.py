@@ -1,10 +1,7 @@
 """Table I: ijcnn1-scale (49990 x 22, 9 workers) — linear, lasso, logistic
 regression + neural network. Synthetic stand-in with matched dimensions
 (offline container; see DESIGN.md §7)."""
-import numpy as np
-
 from .common import compare_algorithms, csv_row, print_table
-from repro.core import baselines, simulator
 from repro.data import paper_tasks
 
 

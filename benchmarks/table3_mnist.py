@@ -1,6 +1,6 @@
 """Table III: MNIST-scale (60000 x 196 stand-in), fixed iteration budget —
 report objective error at the budget + total comms."""
-from .common import compare_algorithms, csv_row, print_table
+from .common import compare_algorithms, csv_row
 from repro.data import paper_tasks
 
 

@@ -20,7 +20,8 @@ import jax
 jax.config.update("jax_enable_x64", True)
 
 from repro import fed
-from repro.core import baselines, simulator
+from repro import opt
+from repro.core import simulator
 from repro.data import paper_tasks
 
 
@@ -50,7 +51,7 @@ def main():
     print(f"{'algo':5s} {'rounds':>7s} {'uplinks':>8s} {'dropped':>8s} "
           f"{'stale':>6s} {'energy J':>9s} {'wall s':>8s}")
     for algo in ("chb", "hb"):
-        cfg = baselines.ALGORITHMS[algo](bundle.alpha_paper, m)
+        cfg = opt.make(algo, bundle.alpha_paper, m)
         hist = fed.run_edge(cfg, bundle.task, edge, num_rounds=400)
         met = fed.edge_metrics_to_accuracy(hist, fstar, 1e-6)
         d = hist.stats.as_dict()

@@ -7,9 +7,9 @@ import jax
 
 jax.config.update("jax_enable_x64", True)
 
-import numpy as np
 
-from repro.core import baselines, simulator
+from repro import opt
+from repro.core import simulator
 from repro.data import paper_tasks
 
 
@@ -18,7 +18,7 @@ def run_task(name, bundle, iters, tol, alpha=None):
     print(f"\n--- {name} (alpha={alpha:.3e}) ---")
     fstar = simulator.estimate_fstar(bundle.task, alpha) if tol else 0.0
     for algo in ("chb", "hb", "lag", "gd"):
-        cfg = baselines.ALGORITHMS[algo](alpha, bundle.L_m.shape[0])
+        cfg = opt.make(algo, alpha, bundle.L_m.shape[0])
         hist = simulator.run(cfg, bundle.task, iters)
         if tol:
             c = simulator.comms_to_accuracy(hist, fstar, tol)

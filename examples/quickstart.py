@@ -6,7 +6,8 @@ import jax
 
 jax.config.update("jax_enable_x64", True)
 
-from repro.core import baselines, simulator
+from repro import opt
+from repro.core import simulator
 from repro.data import paper_tasks
 
 
@@ -16,7 +17,7 @@ def main():
     print(f"9 workers, L={bundle.L:.1f}, alpha=1/L, f*={float(fstar):.4f}\n")
     print(f"{'algo':6s} {'comms@1e-7':>12s} {'iters@1e-7':>12s}")
     for name in ("chb", "hb", "lag", "gd"):
-        cfg = baselines.ALGORITHMS[name](bundle.alpha_paper, 9)
+        cfg = opt.make(name, bundle.alpha_paper, 9)
         hist = simulator.run(cfg, bundle.task, 3000)
         c = simulator.comms_to_accuracy(hist, fstar, 1e-7)
         k = simulator.iterations_to_accuracy(hist, fstar, 1e-7)

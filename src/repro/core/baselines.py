@@ -1,8 +1,13 @@
-"""Named constructors for the algorithm family benchmarked in the paper.
+"""DEPRECATED named constructors for the paper's algorithm family.
 
-All four share the FedOptConfig/step machinery in core/chb.py, which makes
-the comparisons in benchmarks/ apples-to-apples: identical gradient
-computation, identical accounting, only (beta, eps1) differ.
+Superseded by the ``repro.opt`` registry — ``opt.make("chb", alpha, M)``
+returns the composed optimizer directly, ``opt.names()`` lists everything
+registered (including algorithms beyond the paper's four, e.g. ``csgd``).
+
+These shims remain so existing scripts keep working: each returns the
+legacy ``FedOptConfig`` facade (whose construction emits the
+``DeprecationWarning``), and the facade builds a composition bit-identical
+to the registry's (pinned by tests/test_opt.py).
 """
 from __future__ import annotations
 
@@ -11,20 +16,20 @@ from .censoring import paper_eps1
 
 
 def gd(alpha: float, num_workers: int, **kw) -> FedOptConfig:
-    """Classical distributed gradient descent (every worker transmits)."""
+    """DEPRECATED: use ``repro.opt.make("gd", alpha, num_workers)``."""
     return FedOptConfig(alpha=alpha, num_workers=num_workers,
                         beta=0.0, eps1=0.0, **kw)
 
 
 def hb(alpha: float, num_workers: int, beta: float = 0.4, **kw) -> FedOptConfig:
-    """Classical heavy ball (eq. 2); paper default beta=0.4."""
+    """DEPRECATED: use ``repro.opt.make("hb", alpha, num_workers)``."""
     return FedOptConfig(alpha=alpha, num_workers=num_workers,
                         beta=beta, eps1=0.0, **kw)
 
 
 def lag(alpha: float, num_workers: int, eps1: float | None = None,
         eps1_scale: float = 0.1, **kw) -> FedOptConfig:
-    """Censoring-based GD (LAG-WK, ref. [54]) with the shared condition (8)."""
+    """DEPRECATED: use ``repro.opt.make("lag", alpha, num_workers)``."""
     if eps1 is None:
         eps1 = paper_eps1(alpha, num_workers, eps1_scale)
     return FedOptConfig(alpha=alpha, num_workers=num_workers,
@@ -33,11 +38,12 @@ def lag(alpha: float, num_workers: int, eps1: float | None = None,
 
 def chb(alpha: float, num_workers: int, beta: float = 0.4,
         eps1: float | None = None, eps1_scale: float = 0.1, **kw) -> FedOptConfig:
-    """The paper's algorithm with its Sec.-IV default constants."""
+    """DEPRECATED: use ``repro.opt.make("chb", alpha, num_workers)``."""
     if eps1 is None:
         eps1 = paper_eps1(alpha, num_workers, eps1_scale)
     return FedOptConfig(alpha=alpha, num_workers=num_workers,
                         beta=beta, eps1=eps1, **kw)
 
 
+# DEPRECATED: superseded by the repro.opt registry (opt.make / opt.names).
 ALGORITHMS = {"gd": gd, "hb": hb, "lag": lag, "chb": chb}

@@ -1,61 +1,75 @@
-"""Censored Heavy Ball (CHB) — the paper's Algorithm 1 as a pytree optimizer.
+"""Censored Heavy Ball (CHB) — DEPRECATED facade over ``repro.opt``.
 
-One parameterized implementation covers the whole algorithm family used in
-the paper's experiments:
+One parameterized config covers the algorithm family benchmarked in the
+paper:
 
     GD      alpha>0, beta=0,   eps1=0
     HB      alpha>0, beta>0,   eps1=0      (eq. 2)
-    LAG-WK  alpha>0, beta=0,   eps1>0      (censored GD, ref. [54], using the
-                                            same skip condition (8))
+    LAG-WK  alpha>0, beta=0,   eps1>0      (censored GD, ref. [54])
     CHB     alpha>0, beta>0,   eps1>0      (eqs. 4,5,8)
 
-Semantics are *exactly* Algorithm 1:
-  * each worker m keeps the last gradient it transmitted, ghat_m
-    (stacked pytree with leading axis M),
-  * worker m transmits delta_m = g_m - ghat_m iff
-    ||delta_m||^2 > eps1 * ||theta^k - theta^{k-1}||^2   (eq. 8),
-  * the server aggregate is grad_k = sum_m ghat_m^k; we recompute it from the
-    bank instead of carrying the eq. (5) recursion explicitly — algebraically
-    identical, and saves one parameter-sized buffer (DESIGN.md §3),
-  * server update theta^{k+1} = theta^k - alpha*grad_k + beta*(theta^k -
-    theta^{k-1})  (eq. 4).
+Since the ``repro.opt`` redesign the actual Algorithm-1 math lives in
+composable stages (``opt.censor`` / ``opt.transport`` / ``opt.server``
+glued by ``opt.ComposedOptimizer``); a ``FedOptConfig`` merely *names* one
+of those compositions:
 
-Optionally the transmitted deltas are int8-quantized with error feedback
-(beyond paper; core/quantize.py).
+    alpha, beta        -> opt.HeavyBall(alpha, beta)
+    eps1 / adaptive    -> opt.Eq8Censor / opt.AdaptiveCensor / opt.NeverCensor
+    quantize           -> opt.DenseTransport / opt.Int8Transport
 
-Traced vs. static configuration fields
---------------------------------------
-``alpha``, ``beta``, and ``eps1`` may be *traced* jax scalars instead of
-Python floats — this is what lets ``repro.sweep`` run a whole ConfigGrid of
-(alpha, beta, eps1) points as one jitted program (``step`` switches to a
-``jnp.where``-based censor mask, which is algebraically identical to the
-static branches). Everything that changes the *structure* of the program —
-``num_workers``, ``quantize``, ``granularity``, ``bank_dtype``, ``adaptive``
-— must stay a static Python value; ``step`` raises if it sees a tracer
-where a static is required.
+``init``/``step`` here delegate to that composition, bit-exactly (golden
+trajectories pinned by tests/test_opt.py), and constructing a
+``FedOptConfig`` emits a ``DeprecationWarning`` pointing at the new API.
+New code should compose via ``repro.opt`` (``opt.make(name, ...)`` or
+``opt.ComposedOptimizer(...)``) — every consumer (simulator, sweep, fed,
+trainer) accepts either object.
+
+Traced vs. static configuration fields (unchanged contract): ``alpha``,
+``beta``, ``eps1`` may be traced jax scalars; ``num_workers``,
+``quantize``, ``granularity``, ``bank_dtype``, ``adaptive`` must stay
+static Python values.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Optional
+import warnings
+from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
 
-from . import accounting
-from .accounting import CommStats
-from .censoring import delta_sqnorms, step_sqnorm, transmit_mask
-from .quantize import (payload_bytes_dense, payload_bytes_int8,
-                       tree_quantize_roundtrip_per_worker)
-from .util import tree_stack_zeros, tree_sqnorm, tree_sum_leading
+
+def _static_pos(x) -> Optional[bool]:
+    """``bool(x > 0)`` for static scalars; ``None`` when ``x`` is traced.
+
+    Duplicated from ``repro.opt.api.static_pos`` (3 lines) so this module
+    needs no import-time dependency on ``repro.opt`` — core and opt import
+    each other's *submodules* lazily to stay cycle-free.
+    """
+    if isinstance(x, jax.core.Tracer):
+        return None
+    return bool(x > 0)
+
+
+def __getattr__(name):
+    # `chb.FedOptState` / `chb.StepInfo` keep resolving for existing
+    # callers; they ARE the repro.opt types now (the `ema` field of the
+    # old state generalized into the policy-owned `censor` slot). Resolved
+    # lazily to keep the core <-> opt import graph acyclic.
+    if name in ("FedOptState", "StepInfo"):
+        from ..opt.api import OptState, StepStats
+        return OptState if name == "FedOptState" else StepStats
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclasses.dataclass(frozen=True)
 class FedOptConfig:
-    """Configuration for the CHB family.
+    """DEPRECATED: flat-field description of one CHB-family composition.
 
-    ``alpha``/``beta``/``eps1`` may be traced scalars (see module docstring);
-    all other fields must be static Python values.
+    Prefer ``repro.opt`` (``opt.make`` / ``opt.ComposedOptimizer``); this
+    facade remains so existing configs, checkpoints, and scripts keep
+    working. ``alpha``/``beta``/``eps1`` may be traced scalars; all other
+    fields must be static Python values. See the module docstring for the
+    field -> stage mapping.
     """
     alpha: float
     num_workers: int
@@ -64,20 +78,19 @@ class FedOptConfig:
     quantize: Optional[str] = None  # None | "int8"
     # dtype for the stale-gradient bank (bf16 halves state memory at scale)
     bank_dtype: Any = None
-    # BEYOND PAPER (the paper's Sec.-V open problem: "finding an optimal
-    # approach to tune eps1"): when adaptive > 0, worker m transmits iff
-    # ||delta_m||^2 > adaptive * EMA_m(||delta_m||^2) — a scale-free
-    # relative-novelty test that needs no knowledge of L or the step norm
-    # and keeps working in the stochastic-gradient regime. adaptive in
-    # (0, 1): censors the below-usual-novelty fraction of rounds.
+    # BEYOND PAPER: relative-novelty EMA censoring (opt.AdaptiveCensor)
     adaptive: float = 0.0
     adaptive_decay: float = 0.9
-    # BEYOND PAPER: censoring granularity. The paper treats theta as one
-    # vector ("global"); "per_tensor" applies the eq.-(8) test per parameter
-    # tensor — a worker uploads only the tensors whose delta is novel
-    # (embeddings/heads churn differently from deep blocks in LLMs), with
-    # bytes accounted per transmitted tensor.
-    granularity: str = "global"    # "global" | "per_tensor"
+    # BEYOND PAPER: censoring granularity, "global" | "per_tensor"
+    granularity: str = "global"
+
+    def __post_init__(self):
+        warnings.warn(
+            "FedOptConfig is deprecated: compose optimizers via repro.opt "
+            "instead (opt.make(name, alpha, num_workers, ...) or "
+            "opt.ComposedOptimizer); FedOptConfig is now a thin facade "
+            "that builds the same composition.",
+            DeprecationWarning, stacklevel=3)
 
     @property
     def name(self) -> str:
@@ -92,233 +105,23 @@ class FedOptConfig:
             return "hb"
         return "gd"
 
-
-def _static_pos(x) -> Optional[bool]:
-    """``bool(x > 0)`` for static scalars; ``None`` when ``x`` is traced."""
-    if isinstance(x, jax.core.Tracer):
-        return None
-    return bool(x > 0)
+    def build(self):
+        """The ``opt.ComposedOptimizer`` this config describes."""
+        from ..opt.compat import from_config
+        return from_config(self)
 
 
-def _scal(s, leaf: jax.Array) -> jax.Array:
-    """Pin a config scalar to a leaf's dtype before multiplying.
-
-    A static Python float weakly promotes to the leaf dtype, but a traced
-    scalar arrives strongly typed (f64 under x64) and would silently
-    promote an f32 update to f64 and double-round — a different trajectory
-    than the static path. Casting first keeps traced and static configs
-    bit-identical for every param dtype (same contract as
-    ``censoring._eps_cast``)."""
-    return jnp.asarray(s).astype(leaf.dtype)
+def init(cfg: FedOptConfig, params) -> "FedOptState":
+    """DEPRECATED: ``cfg.build().init(params)`` (kept for callers)."""
+    return cfg.build().init(params)
 
 
-class FedOptState(NamedTuple):
-    prev_params: Any          # theta^{k-1}
-    ghat: Any                 # (M, ...) stale-gradient bank
-    err: Any                  # (M, ...) quantization error feedback (zeros if off)
-    comm: CommStats
-    ema: Any = ()             # (M,) EMA of ||delta||^2 (adaptive mode)
+def step(cfg: FedOptConfig, state, params, worker_grads):
+    """DEPRECATED: one Algorithm-1 iteration via the composed optimizer.
 
-
-class StepInfo(NamedTuple):
-    mask: jax.Array           # (M,) 1=transmitted
-    delta_sq: jax.Array       # (M,) ||delta_m||^2
-    step_sq: jax.Array        # () ||theta^k - theta^{k-1}||^2
-    agg_grad_sqnorm: jax.Array  # () ||grad_k||^2 (paper's NN metric, squared)
-
-
-def init(cfg: FedOptConfig, params) -> FedOptState:
-    """Build the iteration-0 state (zero bank, theta^{-1} = theta^0).
-
-    Args:
-      cfg: algorithm constants; ``num_workers``/``quantize``/``bank_dtype``/
-        ``adaptive`` must be static here (they size the state buffers).
-      params: theta^0 pytree.
-    Returns:
-      A FedOptState whose bank/error buffers have leading axis M.
+    Returns ``(new_params, new_state, StepInfo)`` — the legacy return
+    order (the ``repro.opt`` protocol returns state first).
     """
-    if _static_pos(cfg.adaptive) is None:
-        raise NotImplementedError(
-            "cfg.adaptive cannot be traced: it decides whether the EMA "
-            "state buffer exists. Sweep adaptive as a static axis instead.")
-    bank = tree_stack_zeros(params, cfg.num_workers)
-    if cfg.bank_dtype is not None:
-        bank = jax.tree_util.tree_map(
-            lambda x: x.astype(cfg.bank_dtype), bank)
-    err = tree_stack_zeros(params, cfg.num_workers) if cfg.quantize else \
-        jax.tree_util.tree_map(lambda x: jnp.zeros((0,), x.dtype), params)
-    return FedOptState(
-        prev_params=params,
-        ghat=bank,
-        err=err,
-        comm=CommStats.init(cfg.num_workers),
-        ema=jnp.zeros((cfg.num_workers,), jnp.float32)
-        if cfg.adaptive > 0 else (),
-    )
-
-
-def _bcast(mask: jax.Array, leaf: jax.Array) -> jax.Array:
-    """Broadcast per-worker mask (M,) against a leading-M leaf."""
-    return mask.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
-
-
-def step(cfg: FedOptConfig, state: FedOptState, params, worker_grads):
-    """One iteration of Algorithm 1.
-
-    Args:
-      cfg: algorithm constants.
-      state: optimizer state.
-      params: theta^k.
-      worker_grads: pytree stacked with leading axis M — grad of each
-        worker's *local* objective f_m at theta^k.
-    Returns:
-      (new_params, new_state, StepInfo)
-    """
-    cast = lambda t, ref: jax.tree_util.tree_map(
-        lambda x, r: x.astype(r.dtype), t, ref)
-    # delta_m = g_m - ghat_m  (in the bank's dtype for exact server/worker sync)
-    delta = jax.tree_util.tree_map(
-        lambda g, h: g.astype(h.dtype) - h, worker_grads, state.ghat)
-    if cfg.quantize:
-        # pending correction = delta + error-feedback residual
-        pending = jax.tree_util.tree_map(jnp.add, delta, cast(state.err, delta))
-    else:
-        pending = delta
-
-    if cfg.granularity == "per_tensor":
-        eps_pos = _static_pos(cfg.eps1)
-        if eps_pos is None:
-            raise NotImplementedError(
-                "per_tensor censoring needs a static eps1 (its byte "
-                "accounting divmods the payload host-side)")
-        if eps_pos:
-            return _step_per_tensor(cfg, state, params, pending)
-
-    dsq = delta_sqnorms(pending)
-    ssq = step_sqnorm(params, state.prev_params)
-    adaptive_on = _static_pos(cfg.adaptive)
-    if adaptive_on is None:
-        raise NotImplementedError(
-            "cfg.adaptive cannot be traced (see init); sweep it as a "
-            "static axis instead")
-    if adaptive_on:
-        # relative-novelty censoring (beyond paper; see FedOptConfig)
-        warm = state.ema > 0
-        mask = jnp.where(warm,
-                         (dsq > cfg.adaptive * state.ema)
-                         .astype(jnp.float32), 1.0)
-        new_ema = jnp.where(warm,
-                            cfg.adaptive_decay * state.ema
-                            + (1 - cfg.adaptive_decay) * dsq, dsq)
-    else:
-        eps_pos = _static_pos(cfg.eps1)
-        if eps_pos is None:
-            # traced eps1 (repro.sweep): branch-free select — eps1 > 0 runs
-            # the eq.-(8) test, eps1 == 0 transmits unconditionally. Bitwise
-            # identical to the static branches below for every concrete eps1.
-            mask = jnp.where(jnp.asarray(cfg.eps1) > 0,
-                             transmit_mask(dsq, ssq, cfg.eps1),
-                             jnp.ones((cfg.num_workers,), jnp.float32))
-        elif eps_pos:
-            mask = transmit_mask(dsq, ssq, cfg.eps1)
-        else:
-            mask = jnp.ones((cfg.num_workers,), jnp.float32)
-        new_ema = state.ema
-
-    if cfg.quantize == "int8":
-        # per-worker scales: worker m quantizes its own delta slice
-        payload = tree_quantize_roundtrip_per_worker(pending)
-        new_err = jax.tree_util.tree_map(
-            lambda p, q, e: _bcast(mask, p) * (p - q)
-            + (1.0 - _bcast(mask, p)) * e.astype(p.dtype),
-            pending, payload, cast(state.err, pending))
-        per_tx_bytes = payload_bytes_int8(params)
-    else:
-        payload = pending
-        new_err = state.err
-        per_tx_bytes = payload_bytes_dense(params)
-
-    # server/worker synchronized advance of the stale bank
-    new_ghat = jax.tree_util.tree_map(
-        lambda h, q: h + _bcast(mask, h) * q.astype(h.dtype),
-        state.ghat, payload)
-
-    # grad_k = sum_m ghat_m^k  (== eq. (5) recursion unrolled)
-    agg = tree_sum_leading(new_ghat)
-
-    # eq. (4): theta^{k+1} = theta^k - alpha*grad_k + beta*(theta^k - theta^{k-1})
-    new_params = jax.tree_util.tree_map(
-        lambda t, g, tp: (t - _scal(cfg.alpha, t) * g.astype(t.dtype)
-                          + _scal(cfg.beta, t) * (t - tp)).astype(t.dtype),
-        params, agg, state.prev_params)
-
-    info = StepInfo(mask=mask, delta_sq=dsq, step_sq=ssq,
-                    agg_grad_sqnorm=tree_sqnorm(agg))
-    new_state = FedOptState(
-        prev_params=params,
-        ghat=new_ghat,
-        err=new_err,
-        comm=state.comm.update(mask, per_tx_bytes),
-        ema=new_ema,
-    )
-    return new_params, new_state, info
-
-
-def _step_per_tensor(cfg: FedOptConfig, state: FedOptState, params, pending):
-    """Per-tensor censoring (beyond paper; FedOptConfig.granularity).
-
-    The eq.-(8) test is applied independently per parameter tensor:
-    worker m transmits tensor t iff ||delta_m[t]||^2 > eps1*||dtheta[t]||^2.
-    Quantization/error-feedback is not combined with this mode (kept simple);
-    uplink bytes are accounted per transmitted tensor, uplink *count* counts
-    a worker-iteration as transmitting if ANY of its tensors ships (so the
-    headline count stays comparable with global censoring).
-    """
-    assert not cfg.quantize, "per_tensor + quantize not supported"
-    leaves_delta, treedef = jax.tree_util.tree_flatten(pending)
-    leaves_theta = treedef.flatten_up_to(params)
-    leaves_prev = treedef.flatten_up_to(state.prev_params)
-    leaves_ghat = treedef.flatten_up_to(state.ghat)
-
-    m = cfg.num_workers
-    new_ghat = []
-    mib_up = jnp.zeros((), jnp.int32)
-    rem_up = jnp.zeros((), jnp.int32)
-    any_mask = jnp.zeros((m,), jnp.float32)
-    for d, t, tp, h in zip(leaves_delta, leaves_theta, leaves_prev,
-                           leaves_ghat):
-        dsq_t = jnp.sum(jnp.square(d.astype(jnp.float32)).reshape(m, -1),
-                        axis=1)                              # (M,)
-        ssq_t = jnp.sum(jnp.square(t.astype(jnp.float32)
-                                   - tp.astype(jnp.float32)))
-        mask_t = (dsq_t > cfg.eps1 * ssq_t).astype(jnp.float32)
-        any_mask = jnp.maximum(any_mask, mask_t)
-        n_tx_t = jnp.sum(mask_t).astype(jnp.int32)
-        # exact split-counter byte accounting (accounting.py): leaf payload
-        # is static, so divmod happens in Python; carry per leaf keeps the
-        # traced remainder below int32 range
-        pb_mib, pb_rem = accounting.split_bytes(d[0].size * d.dtype.itemsize)
-        mib_up, rem_up = accounting.carry_bytes(
-            mib_up + n_tx_t * pb_mib, rem_up + n_tx_t * pb_rem)
-        new_ghat.append(h + _bcast(mask_t, h) * d.astype(h.dtype))
-    new_ghat = jax.tree_util.tree_unflatten(treedef, new_ghat)
-
-    agg = tree_sum_leading(new_ghat)
-    new_params = jax.tree_util.tree_map(
-        lambda t, g, tp: (t - _scal(cfg.alpha, t) * g.astype(t.dtype)
-                          + _scal(cfg.beta, t) * (t - tp)).astype(t.dtype),
-        params, agg, state.prev_params)
-    comm = CommStats(
-        uplink_count=state.comm.uplink_count + any_mask.astype(jnp.int32),
-        uplink_mib=state.comm.uplink_mib,
-        uplink_rem=state.comm.uplink_rem,
-        downlink_count=state.comm.downlink_count + 1,
-        iterations=state.comm.iterations + 1,
-    ).add_bytes_split(mib_up, rem_up)
-    info = StepInfo(mask=any_mask,
-                    delta_sq=delta_sqnorms(pending),
-                    step_sq=step_sqnorm(params, state.prev_params),
-                    agg_grad_sqnorm=tree_sqnorm(agg))
-    new_state = FedOptState(prev_params=params, ghat=new_ghat,
-                            err=state.err, comm=comm, ema=state.ema)
-    return new_params, new_state, info
+    new_state, new_params, stats = cfg.build().step(
+        state, params, worker_grads)
+    return new_params, new_state, stats

@@ -21,16 +21,16 @@ the censored-delta traffic (int8 if quantization is on).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from .accounting import CommStats
-from .chb import FedOptConfig
+# cfg arguments below accept either a legacy FedOptConfig or a repro.opt
+# ComposedOptimizer: both expose the flat hyperparameter views
+# (alpha/beta/eps1/quantize/num_workers/bank_dtype) these strategies read.
 from .quantize import payload_bytes_dense, payload_bytes_int8, \
     quantize_roundtrip
 from .util import tree_sqnorm
@@ -49,7 +49,23 @@ def _tree_cast_like(t, ref):
     return jax.tree_util.tree_map(lambda x, r: x.astype(r.dtype), t, ref)
 
 
-def _payload_bytes(cfg: FedOptConfig, params) -> int:
+def _check_realizable(cfg) -> None:
+    """The scan/pod strategies realize censoring as ``dsq > eps1 * ssq``
+    only. A composed optimizer with any other censor policy (adaptive,
+    stochastic, custom) would silently run uncensored through the flat
+    ``cfg.eps1`` view — refuse it loudly instead."""
+    censor = getattr(cfg, "censor", None)
+    if censor is None:
+        return      # legacy FedOptConfig: eq-8 semantics by construction
+    from ..opt.censor import Eq8Censor, NeverCensor
+    if not isinstance(censor, (Eq8Censor, NeverCensor)):
+        raise NotImplementedError(
+            f"censor policy {type(censor).__name__} is not realizable by "
+            "the scan/pod training strategies (eq.-8 / uncensored only); "
+            "run it through core.simulator or repro.fed instead")
+
+
+def _payload_bytes(cfg, params) -> int:
     # must stay a Python int: CommStats.update only takes the exact
     # split-counter path for ints (see accounting.py)
     if cfg.quantize == "int8":
@@ -76,7 +92,7 @@ def _shard_map(f, mesh, in_specs, out_specs, manual_axes):
 
 
 # ============================================================ scan strategy
-def init_scan_state(cfg: FedOptConfig, params) -> DistFedState:
+def init_scan_state(cfg, params) -> DistFedState:
     bank_dt = cfg.bank_dtype
     bank = jax.tree_util.tree_map(
         lambda x: jnp.zeros((cfg.num_workers,) + x.shape,
@@ -89,13 +105,14 @@ def init_scan_state(cfg: FedOptConfig, params) -> DistFedState:
                         step=jnp.zeros((), jnp.int32))
 
 
-def make_scan_step(cfg: FedOptConfig,
+def make_scan_step(cfg,
                    loss_fn: Callable[[Any, Any], jax.Array]):
     """Build train_step(params, state, batch) for the scan strategy.
 
     loss_fn(params, worker_batch) -> scalar loss for ONE worker's chunk.
     batch: pytree with leading axis M (worker chunks).
     """
+    _check_realizable(cfg)
     grad_fn = jax.value_and_grad(loss_fn)
 
     def train_step(params, state: DistFedState, batch):
@@ -166,7 +183,7 @@ def make_scan_step(cfg: FedOptConfig,
 
 
 # ============================================================= pod strategy
-def init_pod_state(cfg: FedOptConfig, params, mesh) -> DistFedState:
+def init_pod_state(cfg, params, mesh) -> DistFedState:
     """ghat/err get a leading pod axis sharded over "pod"."""
     npod = mesh.shape["pod"]
     assert cfg.num_workers == npod, (cfg.num_workers, npod)
@@ -186,13 +203,14 @@ def init_pod_state(cfg: FedOptConfig, params, mesh) -> DistFedState:
                         step=jnp.zeros((), jnp.int32))
 
 
-def make_pod_step(cfg: FedOptConfig,
+def make_pod_step(cfg,
                   loss_fn: Callable[[Any, Any], jax.Array], mesh):
     """Build train_step for the pod strategy (multi-pod mesh required).
 
     batch: pytree with leading batch axis sharded P("pod", "data") — each pod
     sees its own shard; censoring gates the cross-pod psum of deltas.
     """
+    _check_realizable(cfg)
     grad_fn = jax.value_and_grad(loss_fn)
     npod = mesh.shape["pod"]
 

@@ -14,14 +14,19 @@ instead of once per point.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, NamedTuple
+from typing import TYPE_CHECKING, Any, Callable, NamedTuple, Union
 
 import jax
 import jax.numpy as jnp
 
-from . import chb
-from .chb import FedOptConfig
+if TYPE_CHECKING:   # annotations only; runtime opt imports are lazy so the
+    # core <-> opt import graph stays acyclic
+    from ..opt.api import FedOptimizer, OptState
+    from .chb import FedOptConfig
+
+    OptLike = Union["FedOptimizer", "FedOptConfig"]
+else:
+    OptLike = Any
 
 
 class FedTask(NamedTuple):
@@ -49,16 +54,16 @@ class History(NamedTuple):
       agg_grad_sqnorm: (K,) ||sum_m ghat_m^k||^2 — the paper's nonconvex
         progress metric, measured on the post-update bank.
       final_params: theta^K pytree.
-      final_state: the full optimizer state after iteration K, including
-        the stale-gradient bank and the precision-safe ``CommStats``
-        (exact uplink/downlink counts and payload bytes).
+      final_state: the full ``repro.opt.OptState`` after iteration K,
+        including the stale-gradient bank and the precision-safe
+        ``CommStats`` (exact uplink/downlink counts and payload bytes).
     """
     objective: jax.Array
     comm_cum: jax.Array
     mask: jax.Array
     agg_grad_sqnorm: jax.Array
     final_params: Any
-    final_state: chb.FedOptState
+    final_state: "OptState"
 
 
 def global_loss(task: FedTask, params) -> jax.Array:
@@ -68,33 +73,37 @@ def global_loss(task: FedTask, params) -> jax.Array:
     return jnp.sum(per_worker)
 
 
-def trajectory(cfg: FedOptConfig, task: FedTask, num_iters: int) -> History:
+def trajectory(cfg: OptLike, task: FedTask, num_iters: int) -> History:
     """Pure (un-jitted) Algorithm-1 scan — the traceable core of ``run``.
 
     Args:
-      cfg: algorithm constants. ``alpha``/``beta``/``eps1`` may be traced
-        scalars (see ``core/chb.py``), which is how ``repro.sweep`` maps one
-        compiled program over a whole configuration grid. Structural fields
-        (``num_workers``, ``quantize``, ...) must be static.
+      cfg: a ``repro.opt`` optimizer (any ``FedOptimizer``), or the
+        deprecated ``FedOptConfig`` facade. Scalar stage hyperparameters
+        (alpha, beta, eps1, tau0, ...) may be traced, which is how
+        ``repro.sweep`` maps one compiled program over a whole
+        configuration grid; structural choices (num_workers, stage
+        classes, quantize, ...) must be static.
       task: the distributed problem; ``init_params``/``worker_data`` leaves
         may themselves be traced (e.g. gathered out of a stacked task bank).
       num_iters: K, the static scan length.
     Returns:
       The full ``History`` of the run (see its docstring).
     """
+    from ..opt.compat import as_optimizer
+    opt = as_optimizer(cfg)
     worker_grads_fn = jax.vmap(task.grad_fn, in_axes=(None, 0))
 
     def one_iter(carry, _):
         params, state = carry
         grads = worker_grads_fn(params, task.worker_data)
-        new_params, new_state, info = chb.step(cfg, state, params, grads)
+        new_state, new_params, info = opt.step(state, params, grads)
         rec = (global_loss(task, params),
                new_state.comm.total_uplinks,
                info.mask,
                info.agg_grad_sqnorm)
         return (new_params, new_state), rec
 
-    state0 = chb.init(cfg, task.init_params)
+    state0 = opt.init(task.init_params)
     (params, state), (obj, comms, mask, gsq) = jax.lax.scan(
         one_iter, (task.init_params, state0), None, length=num_iters)
     return History(objective=obj, comm_cum=comms, mask=mask,
@@ -102,12 +111,14 @@ def trajectory(cfg: FedOptConfig, task: FedTask, num_iters: int) -> History:
                    final_state=state)
 
 
-def run(cfg: FedOptConfig, task: FedTask, num_iters: int,
+def run(cfg: OptLike, task: FedTask, num_iters: int,
         jit: bool = True) -> History:
     """Run Algorithm 1 for ``num_iters`` iterations on one configuration.
 
     Args:
-      cfg: static algorithm constants (one grid point).
+      cfg: one optimizer — a ``repro.opt`` composition (``opt.make`` /
+        ``opt.ComposedOptimizer`` / any ``FedOptimizer``) or a deprecated
+        ``FedOptConfig``.
       task: the distributed problem (see ``FedTask``).
       num_iters: number of server iterations K.
       jit: compile the scan (default); ``False`` runs eagerly for debugging.
@@ -128,10 +139,16 @@ def run(cfg: FedOptConfig, task: FedTask, num_iters: int,
 def estimate_fstar(task: FedTask, alpha: float, num_iters: int = 20000,
                    beta: float = 0.9) -> jax.Array:
     """Estimate f(theta^*) by running (uncensored) heavy ball to convergence."""
-    cfg = FedOptConfig(alpha=alpha, beta=beta, eps1=0.0,
-                       num_workers=jax.tree_util.tree_leaves(
-                           task.worker_data)[0].shape[0])
-    hist = run(cfg, task, num_iters)
+    from ..opt.censor import NeverCensor
+    from ..opt.optimizer import ComposedOptimizer
+    from ..opt.server import HeavyBall
+    from ..opt.transport import DenseTransport
+    opt = ComposedOptimizer(
+        censor=NeverCensor(), transport=DenseTransport(),
+        server=HeavyBall(alpha, beta),
+        num_workers=jax.tree_util.tree_leaves(
+            task.worker_data)[0].shape[0])
+    hist = run(opt, task, num_iters)
     return jnp.minimum(jnp.min(hist.objective),
                        global_loss(task, hist.final_params))
 

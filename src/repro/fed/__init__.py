@@ -10,7 +10,8 @@ participation, and the energy / wall-clock cost of every byte.
     edge = fed.EdgeConfig(population=population,
                           channel=fed.ChannelConfig.lossy(0.1),
                           quorum=0.8)
-    hist = fed.run_edge(baselines.chb(alpha, 9), task, edge, num_rounds=500)
+    hist = fed.run_edge(opt.make("chb", alpha, 9), task, edge,
+                        num_rounds=500)
 
 ``fed.sync_config(M)`` is the correctness anchor: it reproduces
 ``core.simulator.run`` exactly (see tests/test_fed_runtime.py).

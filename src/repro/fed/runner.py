@@ -1,11 +1,16 @@
 """Event-driven federated edge runtime for the CHB family.
 
-Wraps the *exact* ``core/chb.step`` Algorithm-1 semantics in a deployment
-simulation: heterogeneous clients (``clients.py``) compute local gradients
-with per-client latency and availability, uplinks travel through a channel
-model (``channel.py``) that charges air time + joules (``energy.py``) and may
-drop packets, and the server advances by eq. (4) whenever a quorum of the
-round's cohort has reported.
+Wraps the *exact* Algorithm-1 semantics of a composed ``repro.opt``
+optimizer in a deployment simulation: heterogeneous clients
+(``clients.py``) compute local gradients with per-client latency and
+availability, uplinks travel through a channel model (``channel.py``) that
+charges air time + joules (``energy.py``) and may drop packets, and the
+server advances by the composed server update (eq. 4 for heavy ball)
+whenever a quorum of the round's cohort has reported. The censor and
+transport stages run through their per-client entry points
+(``client_decide`` / ``*_row``), so any composition whose censor supports
+per-client decisions — including the stochastic CSGD policy — runs here
+unchanged.
 
 Correctness anchor (tested): with zero latency, lossless channel, full
 participation, and full quorum (``sync_config``), the event loop reduces to
@@ -41,13 +46,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import chb
 from ..core.censoring import step_sqnorm
-from ..core.chb import FedOptConfig
-from ..core.quantize import (payload_bytes_dense, payload_bytes_int8,
-                             tree_quantize_roundtrip)
+from ..core.quantize import payload_bytes_dense
 from ..core.simulator import FedTask, global_loss
 from ..core.util import (tree_sqnorm, tree_sum_leading, tree_worker_slice)
+from ..opt import as_optimizer
+from ..opt.optimizer import ComposedOptimizer
 from .channel import ChannelConfig
 from .clients import Population, uniform_population
 from .energy import EdgeStats, EnergyModel
@@ -126,30 +130,24 @@ class _Event(NamedTuple):
     #                            transmitted, new_err_row)
 
 
-def _compile(cfg: FedOptConfig, task: FedTask):
-    """Jitted closures mirroring ``chb.step`` line-for-line (see module doc)."""
-    quantized = cfg.quantize == "int8"
+def _compile(opt: ComposedOptimizer, task: FedTask):
+    """Jitted closures mirroring the composed ``opt.step`` stage-for-stage.
 
-    def client_eval(params, data_i, ghat_row, err_row, ssq):
+    The censor and transport stages expose per-client entry points
+    (``client_decide`` / ``*_row``) precisely so this event loop can
+    evaluate one worker's upload at whatever wall-clock moment it finishes
+    computing, while staying draw- and bit-compatible with the batched
+    simulator step.
+    """
+    def client_eval(params, data_i, ghat_row, err_row, ssq, rnd, worker):
         g = task.grad_fn(params, data_i)
         delta = jax.tree_util.tree_map(
             lambda x, h: x.astype(h.dtype) - h, g, ghat_row)
-        if quantized:
-            pending = jax.tree_util.tree_map(
-                lambda d, e: d + e.astype(d.dtype), delta, err_row)
-        else:
-            pending = delta
+        pending = opt.transport.prepare_row(delta, err_row)
         dsq = tree_sqnorm(pending)   # f32 accumulation == delta_sqnorms row
-        if cfg.eps1 > 0:
-            transmit = dsq > cfg.eps1 * ssq
-        else:
-            transmit = jnp.ones((), jnp.bool_)
-        if quantized:
-            payload = tree_quantize_roundtrip(pending)
-            new_err = jax.tree_util.tree_map(
-                lambda p, q: p - q, pending, payload)
-        else:
-            payload, new_err = pending, err_row
+        transmit = opt.censor.client_decide(rnd, worker, dsq, ssq)
+        payload = opt.transport.encode_row(pending)
+        new_err = opt.transport.feedback_row(pending, payload, err_row)
         return payload, new_err, dsq, transmit
 
     def fold(ghat, payload, i):
@@ -158,12 +156,9 @@ def _compile(cfg: FedOptConfig, task: FedTask):
 
     def server_update(params, prev_params, ghat):
         agg = tree_sum_leading(ghat)
-        new_params = jax.tree_util.tree_map(
-            lambda t, g, tp: (t - cfg.alpha * g.astype(t.dtype)
-                              + cfg.beta * (t - tp)).astype(t.dtype),
-            params, agg, prev_params)
+        new_params = opt.server.apply(params, prev_params, agg)
         # ||theta^{k+1} - theta^k||^2, broadcast with theta^{k+1} so the next
-        # cohort runs the eq. (8) test with exactly chb.step's step norm
+        # cohort runs the eq. (8) test with exactly the batched step norm
         next_ssq = step_sqnorm(new_params, params)
         return new_params, next_ssq, tree_sqnorm(agg)
 
@@ -172,14 +167,16 @@ def _compile(cfg: FedOptConfig, task: FedTask):
             loss)
 
 
-def run_edge(cfg: FedOptConfig, task: FedTask, edge: EdgeConfig,
+def run_edge(cfg, task: FedTask, edge: EdgeConfig,
              num_rounds: int) -> EdgeHistory:
     """Run the deployment scenario for ``num_rounds`` server rounds.
 
     Args:
-      cfg: algorithm constants; must use ``granularity="global"`` and
-        ``adaptive=0`` (the modes the event loop implements), and its
-        ``num_workers`` must equal the population size.
+      cfg: the algorithm — a ``repro.opt`` optimizer (or a legacy
+        ``FedOptConfig``); must use ``granularity="global"`` and a censor
+        policy with per-client decisions (``supports_event_runtime`` —
+        everything except the adaptive EMA), and its ``num_workers`` must
+        equal the population size.
       task: the distributed problem (leaves stacked with leading axis M).
       edge: the deployment scenario (clients, channel, energy, quorum).
       num_rounds: number of server (eq.-4) updates to perform.
@@ -187,34 +184,45 @@ def run_edge(cfg: FedOptConfig, task: FedTask, edge: EdgeConfig,
       An ``EdgeHistory`` with per-round objective/uplink/energy/wall-clock
       trajectories and the per-client ``EdgeStats`` accounting.
     Raises:
-      NotImplementedError: for per-tensor or adaptive censoring configs.
+      NotImplementedError: for per-tensor granularity or censor policies
+        without a per-client decision rule (adaptive).
       ValueError: if ``cfg.num_workers`` mismatches the population.
     """
-    if cfg.granularity != "global":
+    opt = as_optimizer(cfg)
+    if getattr(opt, "censor", None) is None or \
+            getattr(opt, "transport", None) is None or \
+            getattr(opt, "server", None) is None:
+        raise TypeError(
+            "fed.run_edge drives the censor/transport/server stages "
+            "directly (per-client entry points), so it needs a "
+            "ComposedOptimizer (or an optimizer exposing those stage "
+            f"attributes), not {type(opt).__name__}")
+    if getattr(opt, "granularity", "global") != "global":
         raise NotImplementedError(
             "fed.runner supports granularity='global' only")
-    if cfg.adaptive > 0:
+    if not getattr(opt.censor, "supports_event_runtime", False):
         raise NotImplementedError(
-            "fed.runner does not support adaptive censoring yet")
+            f"censor policy {type(opt.censor).__name__} has no per-client "
+            "decision rule (adaptive censoring needs the whole cohort); "
+            "it cannot run in the event-driven runtime")
     m = edge.population.num_clients
-    if cfg.num_workers != m:
+    if opt.num_workers != m:
         raise ValueError(
-            f"cfg.num_workers={cfg.num_workers} != population "
+            f"cfg.num_workers={opt.num_workers} != population "
             f"num_clients={m}")
 
     rng = np.random.default_rng(edge.seed)
-    client_eval, fold, server_update, loss = _compile(cfg, task)
+    client_eval, fold, server_update, loss = _compile(opt, task)
 
-    # reuse chb.init so bank/err construction (dtypes included) is identical
-    st0 = chb.init(cfg, task.init_params)
+    # reuse opt.init so bank/err construction (dtypes included) is identical
+    st0 = opt.init(task.init_params)
     ghat, err = st0.ghat, st0.err
     params = task.init_params
-    prev_params = params           # theta^{-1} = theta^0, as in chb.init
+    prev_params = params           # theta^{-1} = theta^0, as in opt.init
     ssq = jnp.zeros(())            # ||theta^0 - theta^{-1}||^2 = 0
 
-    payload_nbytes = (payload_bytes_int8(task.init_params)
-                      if cfg.quantize == "int8"
-                      else payload_bytes_dense(task.init_params))
+    quantized = opt.transport.stateful
+    payload_nbytes = opt.transport.payload_bytes(task.init_params)
     down_nbytes = payload_bytes_dense(task.init_params)
 
     stats = EdgeStats(num_clients=m)
@@ -271,8 +279,9 @@ def run_edge(cfg: FedOptConfig, task: FedTask, edge: EdgeConfig,
             payload, new_err_row, _dsq, transmit = client_eval(
                 params=p_i, data_i=tree_worker_slice(task.worker_data, i),
                 ghat_row=tree_worker_slice(ghat, i),
-                err_row=tree_worker_slice(err, i) if cfg.quantize else (),
-                ssq=ssq_i)
+                err_row=tree_worker_slice(err, i) if quantized else (),
+                ssq=ssq_i, rnd=jnp.asarray(rnd, jnp.int32),
+                worker=jnp.asarray(i, jnp.int32))
             if bool(transmit):
                 tx = edge.channel.uplink(payload_nbytes, rng)
                 stats.record_uplink(i, payload_nbytes, tx.time_s,
@@ -290,7 +299,7 @@ def run_edge(cfg: FedOptConfig, task: FedTask, edge: EdgeConfig,
             payload, delivered, transmitted, new_err_row = ev.data
             if transmitted and delivered:
                 ghat = fold(ghat, payload, jnp.asarray(i))
-                if cfg.quantize:
+                if quantized:
                     err = jax.tree_util.tree_map(
                         lambda e, n: e.at[i].set(n.astype(e.dtype)),
                         err, new_err_row)

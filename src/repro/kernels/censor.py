@@ -19,7 +19,6 @@ single-sweep performance; numerics are identical either way.
 """
 from __future__ import annotations
 
-import functools
 import math
 
 import jax

@@ -8,7 +8,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from . import censor, flash_attention, hb_update, ref
 

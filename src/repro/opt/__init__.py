@@ -1,0 +1,44 @@
+"""repro.opt: the composable federated-optimizer protocol.
+
+Algorithm 1 and its whole literature neighborhood decompose into three
+pluggable stages — a censor policy (who uploads), a transport (what the
+upload carries), and a server update (how theta advances). A
+:class:`ComposedOptimizer` glues one of each together; the string-keyed
+registry names the useful compositions and round-trips them to/from JSON
+config dicts for sweeps, CLI flags, and benchmark artifacts.
+
+    from repro import opt
+    o = opt.make("chb", alpha=0.05, num_workers=9)     # by name
+    o = opt.ComposedOptimizer(                          # or by hand
+        censor=opt.Eq8Censor(0.4), transport=opt.DenseTransport(),
+        server=opt.HeavyBall(0.05, beta=0.4), num_workers=9)
+    hist = simulator.run(o, task, 1000)                 # runs everywhere
+
+Every consumer (``core.simulator``, ``repro.sweep``, ``repro.fed``, the
+trainer) is written against the :class:`FedOptimizer` protocol and also
+still accepts the deprecated ``core.chb.FedOptConfig`` facade. See
+``docs/opt_api.md`` for the stage anatomy and the add-your-own-algorithm
+tutorial.
+"""
+from .api import FedOptimizer, OptState, StepStats, static_pos
+from .censor import (AdaptiveCensor, CensorPolicy, Eq8Censor, NeverCensor,
+                     StochasticCensor)
+from .compat import as_optimizer, from_config
+from .optimizer import ComposedOptimizer
+from .registry import (CENSOR_KINDS, SERVER_KINDS, TRANSPORT_KINDS,
+                       from_spec, make, make_for_point, names, register,
+                       to_spec)
+from .server import GradientDescent, HeavyBall, ServerUpdate
+from .transport import DenseTransport, Int8Transport, Transport
+
+__all__ = [
+    "FedOptimizer", "OptState", "StepStats", "static_pos",
+    "CensorPolicy", "NeverCensor", "Eq8Censor", "AdaptiveCensor",
+    "StochasticCensor",
+    "Transport", "DenseTransport", "Int8Transport",
+    "ServerUpdate", "GradientDescent", "HeavyBall",
+    "ComposedOptimizer",
+    "register", "make", "make_for_point", "names", "to_spec", "from_spec",
+    "CENSOR_KINDS", "TRANSPORT_KINDS", "SERVER_KINDS",
+    "from_config", "as_optimizer",
+]

@@ -1,0 +1,194 @@
+"""Censor policies: who uploads this round.
+
+Each policy answers the same question — "is worker m's delta novel enough
+to transmit?" — with different information:
+
+  * :class:`NeverCensor` — everyone transmits (GD/HB family).
+  * :class:`Eq8Censor` — the paper's eq. (8): transmit iff
+    ``||delta_m||^2 > eps1 * ||theta^k - theta^{k-1}||^2``.
+  * :class:`AdaptiveCensor` — beyond paper: relative-novelty EMA test
+    (the paper's Sec.-V open problem on tuning eps1).
+  * :class:`StochasticCensor` — CSGD-style (Li et al., arXiv:1909.03631):
+    a geometrically decaying threshold ``tau_k = tau0 * decay^k`` applied
+    stochastically — worker m transmits iff ``||delta_m||^2 > u_m * tau_k``
+    with ``u_m ~ U(0,1)`` drawn per (round, worker).
+
+Two entry points, two execution environments:
+
+  * ``decide(state, delta_sq, step_sq)`` — batched over all M workers;
+    used by the composed step (simulator / sweep / trainer paths).
+  * ``client_decide(round_index, worker, delta_sq, step_sq)`` — one
+    worker's decision, evaluated inside the event-driven ``repro.fed``
+    runtime at whatever wall-clock moment the client finishes computing.
+    Policies whose decisions can be made per-client (everything except the
+    adaptive EMA, which needs the whole cohort's deltas) set
+    ``supports_event_runtime = True`` and guarantee that a synchronous
+    schedule reproduces ``decide``'s masks draw-for-draw.
+
+Dtype discipline: every decision is evaluated in the norms' (f32)
+precision for static AND traced hyperparameters — the sweep engine's
+bit-exactness contract depends on it (see ``core/censoring._eps_cast``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, ClassVar, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from ..core.censoring import transmit_mask, _eps_cast
+from .api import static_pos
+
+
+@runtime_checkable
+class CensorPolicy(Protocol):
+    """Pluggable stage deciding the per-worker transmit mask."""
+
+    supports_event_runtime: ClassVar[bool]
+
+    def init(self, num_workers: int) -> Any:
+        """Policy state at iteration 0 (lives in ``OptState.censor``)."""
+        ...
+
+    def decide(self, state, delta_sq: jax.Array, step_sq: jax.Array
+               ) -> tuple[jax.Array, Any]:
+        """Batched decision: ``((M,) f32 mask, new_state)``."""
+        ...
+
+    def client_decide(self, round_index, worker, delta_sq: jax.Array,
+                      step_sq: jax.Array) -> jax.Array:
+        """One worker's decision (bool scalar) for the event runtime."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class NeverCensor:
+    """Every worker transmits every round (classical GD/HB)."""
+
+    supports_event_runtime: ClassVar[bool] = True
+
+    def init(self, num_workers: int):
+        return ()
+
+    def decide(self, state, delta_sq, step_sq):
+        return jnp.ones(delta_sq.shape, jnp.float32), state
+
+    def client_decide(self, round_index, worker, delta_sq, step_sq):
+        return jnp.ones((), jnp.bool_)
+
+
+@dataclasses.dataclass(frozen=True)
+class Eq8Censor:
+    """The paper's skip condition (eq. 8).
+
+    ``eps1`` may be a Python float or a traced scalar (the sweep engine
+    maps a whole eps-grid through one compiled program). A traced eps1
+    compiles a branch-free ``where`` that is bitwise identical to the
+    static branches for every concrete value.
+    """
+
+    eps1: Any
+    supports_event_runtime: ClassVar[bool] = True
+
+    def init(self, num_workers: int):
+        return ()
+
+    def decide(self, state, delta_sq, step_sq):
+        pos = static_pos(self.eps1)
+        if pos is None:
+            # traced eps1 (repro.sweep): eps1 > 0 runs the eq.-(8) test,
+            # eps1 == 0 transmits unconditionally.
+            mask = jnp.where(jnp.asarray(self.eps1) > 0,
+                             transmit_mask(delta_sq, step_sq, self.eps1),
+                             jnp.ones(delta_sq.shape, jnp.float32))
+        elif pos:
+            mask = transmit_mask(delta_sq, step_sq, self.eps1)
+        else:
+            mask = jnp.ones(delta_sq.shape, jnp.float32)
+        return mask, state
+
+    def client_decide(self, round_index, worker, delta_sq, step_sq):
+        if static_pos(self.eps1) is False:
+            return jnp.ones((), jnp.bool_)
+        return delta_sq > _eps_cast(self.eps1, step_sq) * step_sq
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveCensor:
+    """Beyond paper: transmit iff ``||delta_m||^2 > adaptive * EMA_m``.
+
+    A scale-free relative-novelty test needing no knowledge of L or the
+    step norm (see ``core/chb.py``'s original docstring). Stateful across
+    the whole cohort (the EMA update consumes every worker's delta), so it
+    cannot run in the asynchronous event runtime.
+    """
+
+    adaptive: float
+    decay: float = 0.9
+    supports_event_runtime: ClassVar[bool] = False
+
+    def init(self, num_workers: int):
+        return jnp.zeros((num_workers,), jnp.float32)
+
+    def decide(self, ema, delta_sq, step_sq):
+        warm = ema > 0
+        mask = jnp.where(warm,
+                         (delta_sq > self.adaptive * ema)
+                         .astype(jnp.float32), 1.0)
+        new_ema = jnp.where(warm,
+                            self.decay * ema
+                            + (1 - self.decay) * delta_sq, delta_sq)
+        return mask, new_ema
+
+    def client_decide(self, round_index, worker, delta_sq, step_sq):
+        raise NotImplementedError(
+            "adaptive censoring needs the whole cohort's deltas; it cannot "
+            "run in the event-driven fed runtime")
+
+
+@dataclasses.dataclass(frozen=True)
+class StochasticCensor:
+    """CSGD-style stochastic censoring (Li et al., arXiv:1909.03631).
+
+    CSGD censors against a geometrically decaying threshold sequence
+    ``tau_k = tau0 * decay^k`` (novelty demanded of an upload shrinks as
+    the iterates converge). We apply it stochastically: worker m draws
+    ``u_m ~ U(0,1)`` per round and transmits iff
+    ``||delta_m||^2 > u_m * tau_k`` — transmit probability
+    ``min(1, ||delta||^2 / tau_k)``, so large deltas always ship and small
+    ones ship with probability proportional to their novelty (which keeps
+    the bank live even when ``tau0`` overshoots the problem's scale).
+
+    The per-(round, worker) uniforms are derived by key folding, so the
+    batched ``decide`` and the event runtime's ``client_decide`` see the
+    *same* draws — a synchronous edge schedule reproduces the simulator
+    exactly. ``tau0`` may be traced (sweepable); ``decay``/``seed`` are
+    static. State is the round counter k.
+    """
+
+    tau0: Any
+    decay: float = 0.99
+    seed: int = 0
+    supports_event_runtime: ClassVar[bool] = True
+
+    def init(self, num_workers: int):
+        return jnp.zeros((), jnp.int32)
+
+    def _tau(self, k) -> jax.Array:
+        return (jnp.asarray(self.tau0).astype(jnp.float32)
+                * jnp.asarray(self.decay, jnp.float32) ** k)
+
+    def _uniform(self, k, worker) -> jax.Array:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), k)
+        return jax.random.uniform(jax.random.fold_in(key, worker))
+
+    def decide(self, k, delta_sq, step_sq):
+        workers = jnp.arange(delta_sq.shape[0])
+        u = jax.vmap(lambda i: self._uniform(k, i))(workers)
+        mask = (delta_sq > u * self._tau(k)).astype(jnp.float32)
+        return mask, k + 1
+
+    def client_decide(self, round_index, worker, delta_sq, step_sq):
+        u = self._uniform(round_index, worker)
+        return delta_sq > u * self._tau(round_index)

@@ -1,0 +1,70 @@
+"""Legacy-config bridge: ``FedOptConfig`` -> ``ComposedOptimizer``.
+
+``core.chb.FedOptConfig`` predates the stage protocol; it is now a thin
+deprecated facade whose every (alpha, beta, eps1, quantize, adaptive,
+granularity) combination maps onto exactly one composition. The mapping
+lives here so neither ``repro.opt`` nor ``repro.core.chb`` imports the
+other's internals (chb imports this module; this module duck-types the
+config).
+
+``as_optimizer`` is what every consumer entry point calls: it accepts
+either a ``FedOptimizer`` (passed through untouched) or a legacy config
+(converted). The conversion itself does NOT warn — the deprecation warning
+fires once at ``FedOptConfig`` construction, where the user's code is.
+"""
+from __future__ import annotations
+
+from .api import FedOptimizer, static_pos
+from .censor import AdaptiveCensor, Eq8Censor, NeverCensor
+from .optimizer import ComposedOptimizer
+from .registry import _transport
+from .server import HeavyBall
+
+
+def from_config(cfg) -> ComposedOptimizer:
+    """Compose the optimizer a legacy ``FedOptConfig`` describes.
+
+    Bit-exactness contract: the composition's ``step`` runs the same jnp
+    ops in the same order as the pre-redesign ``chb.step`` for every
+    reachable config (golden-pinned by tests/test_opt.py). Traced
+    alpha/beta/eps1 are carried into the stages; a traced ``adaptive``
+    raises (it decides whether the EMA state buffer exists).
+    """
+    adaptive_on = static_pos(cfg.adaptive)
+    if adaptive_on is None:
+        raise NotImplementedError(
+            "cfg.adaptive cannot be traced: it decides whether the EMA "
+            "state buffer exists. Sweep adaptive as a static axis instead.")
+    # legacy precedence (matching the old chb.step branch order): a
+    # per_tensor config with a nonzero eps1 took the eq.-(8) per-tensor
+    # path before adaptive was ever consulted; otherwise adaptive > 0
+    # overrode eps1 entirely.
+    per_tensor_eq8 = (cfg.granularity == "per_tensor"
+                      and static_pos(cfg.eps1) is not False)
+    if adaptive_on and not per_tensor_eq8:
+        censor = AdaptiveCensor(cfg.adaptive, cfg.adaptive_decay)
+    elif static_pos(cfg.eps1) is False:
+        censor = NeverCensor()
+    else:
+        censor = Eq8Censor(cfg.eps1)
+    return ComposedOptimizer(
+        censor=censor,
+        transport=_transport(cfg.quantize),
+        server=HeavyBall(cfg.alpha, cfg.beta),
+        num_workers=cfg.num_workers,
+        granularity=cfg.granularity,
+        bank_dtype=cfg.bank_dtype,
+    )
+
+
+def as_optimizer(cfg_or_opt) -> FedOptimizer:
+    """Coerce a consumer argument to the ``FedOptimizer`` protocol.
+
+    Anything exposing callable ``init``/``step`` is passed through
+    (a ``ComposedOptimizer`` or any custom protocol implementation);
+    a legacy ``FedOptConfig`` is converted via :func:`from_config`.
+    """
+    if callable(getattr(cfg_or_opt, "step", None)) and \
+            callable(getattr(cfg_or_opt, "init", None)):
+        return cfg_or_opt
+    return from_config(cfg_or_opt)

@@ -1,0 +1,251 @@
+"""``ComposedOptimizer`` — Algorithm 1 assembled from pluggable stages.
+
+This is the former ``core/chb.step`` body, refactored so that the three
+orthogonal decisions (censor / transport / server) are stage calls instead
+of hard-wired branches. Every composition expressible by the old
+``FedOptConfig`` produces a bit-identical program (pinned by
+``tests/test_opt.py``'s golden fingerprints and the ``tests/test_sweep.py``
+exactness grids); new algorithms are new compositions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core import accounting
+from ..core.accounting import CommStats
+from ..core.censoring import delta_sqnorms, step_sqnorm
+from ..core.util import tree_sqnorm, tree_stack_zeros, tree_sum_leading
+from .api import OptState, StepStats, static_pos
+from .censor import CensorPolicy, Eq8Censor, NeverCensor
+from .server import HeavyBall, ServerUpdate
+from .transport import Transport, _bcast
+
+
+@dataclasses.dataclass(frozen=True)
+class ComposedOptimizer:
+    """One censor policy + one transport + one server update.
+
+    Structural fields (``num_workers``, ``granularity``, ``bank_dtype``,
+    and each stage's *class*) decide the compiled program and must be
+    static; the stages' scalar hyperparameters (alpha, beta, eps1, tau0)
+    may be traced — which is how ``repro.sweep`` runs a whole grid of
+    compositions through one compiled program.
+
+    Attributes:
+      censor: who uploads (``opt.censor``).
+      transport: what the upload carries (``opt.transport``).
+      server: how theta advances (``opt.server``).
+      num_workers: M.
+      granularity: ``"global"`` (the paper's single-vector view) or
+        ``"per_tensor"`` (beyond paper: the eq.-(8) test per parameter
+        tensor; requires an :class:`~repro.opt.censor.Eq8Censor` with a
+        static eps1 and a dense transport).
+      bank_dtype: optional dtype for the stale-gradient bank (bf16 halves
+        state memory at scale).
+    """
+
+    censor: CensorPolicy
+    transport: Transport
+    server: ServerUpdate
+    num_workers: int
+    granularity: str = "global"
+    bank_dtype: Any = None
+
+    # ------------------------------------------------ hyperparameter views
+    # Flat views of the stages' scalars, matching the legacy FedOptConfig
+    # field names so hyperparameter-only consumers (core/distributed, the
+    # sweep grid) read either object interchangeably.
+    @property
+    def alpha(self):
+        return self.server.alpha
+
+    @property
+    def beta(self):
+        return getattr(self.server, "beta", 0.0)
+
+    @property
+    def eps1(self):
+        return getattr(self.censor, "eps1", 0.0)
+
+    @property
+    def adaptive(self):
+        return getattr(self.censor, "adaptive", 0.0)
+
+    @property
+    def quantize(self) -> Optional[str]:
+        return self.transport.mode
+
+    @property
+    def name(self) -> str:
+        """gd/hb/lag/chb classification (paper Sec. II), or "swept"."""
+        ep, bp = static_pos(self.eps1), static_pos(self.beta)
+        if ep is None or bp is None:
+            return "swept"
+        if ep and bp:
+            return "chb"
+        if ep:
+            return "lag"
+        if bp:
+            return "hb"
+        return "gd"
+
+    def with_hparams(self, *, alpha=None, beta=None,
+                     eps1=None) -> "ComposedOptimizer":
+        """Rebind scalar hyperparameters (possibly with traced values).
+
+        This is the sweep engine's hook: one composition is built per
+        static partition, then each grid point rebinds (alpha, beta, eps1)
+        with device scalars.
+
+        * ``beta`` rebinds a momentum server; a momentum-free server
+          (``GradientDescent``) is promoted to ``HeavyBall(alpha, beta)``,
+          which is bit-identical at beta=0 — so a ``lag``/``gd`` base
+          sweeps exactly like the equivalent legacy config did.
+        * ``eps1`` retargets an eq.-(8) censor (or upgrades a
+          ``NeverCensor`` to one). Any other policy — adaptive,
+          stochastic, or a custom one — keeps its own thresholds
+          untouched (the engine's eps axis does not describe them; sweep
+          their knobs via named ``GridPoint(algo=...)`` points instead).
+        """
+        server = self.server
+        if alpha is not None:
+            server = dataclasses.replace(server, alpha=alpha)
+        if beta is not None:
+            if hasattr(server, "beta"):
+                server = dataclasses.replace(server, beta=beta)
+            else:
+                server = HeavyBall(server.alpha, beta)
+        censor = self.censor
+        if eps1 is not None:
+            if isinstance(censor, Eq8Censor):
+                censor = dataclasses.replace(censor, eps1=eps1)
+            elif isinstance(censor, NeverCensor):
+                censor = Eq8Censor(eps1)
+            # other policies own their thresholds: leave them as composed
+        return dataclasses.replace(self, censor=censor, server=server)
+
+    # ----------------------------------------------------------- protocol
+    def init(self, params) -> OptState:
+        """Build the iteration-0 state (zero bank, theta^{-1} = theta^0)."""
+        bank = tree_stack_zeros(params, self.num_workers)
+        if self.bank_dtype is not None:
+            bank = jax.tree_util.tree_map(
+                lambda x: x.astype(self.bank_dtype), bank)
+        return OptState(
+            prev_params=params,
+            ghat=bank,
+            err=self.transport.init(params, self.num_workers),
+            comm=CommStats.init(self.num_workers),
+            censor=self.censor.init(self.num_workers),
+        )
+
+    def step(self, state: OptState, params, worker_grads
+             ) -> tuple[OptState, Any, StepStats]:
+        """One iteration of Algorithm 1 (see ``api.FedOptimizer.step``)."""
+        # delta_m = g_m - ghat_m (in the bank's dtype for exact sync)
+        delta = jax.tree_util.tree_map(
+            lambda g, h: g.astype(h.dtype) - h, worker_grads, state.ghat)
+        pending = self.transport.prepare(delta, state.err)
+
+        # per_tensor granularity binds to the eq.-(8) censor only; any other
+        # policy (never / adaptive / stochastic) degenerates to the global
+        # path, mirroring the legacy eps1==0 behavior.
+        if self.granularity == "per_tensor" and \
+                isinstance(self.censor, Eq8Censor):
+            eps_pos = static_pos(self.censor.eps1)
+            if eps_pos is None:
+                raise NotImplementedError(
+                    "per_tensor censoring needs a static eps1 (its byte "
+                    "accounting divmods the payload host-side)")
+            if eps_pos:
+                return self._step_per_tensor(state, params, pending)
+
+        dsq = delta_sqnorms(pending)
+        ssq = step_sqnorm(params, state.prev_params)
+        mask, new_censor = self.censor.decide(state.censor, dsq, ssq)
+
+        payload = self.transport.encode(pending)
+        new_err = self.transport.feedback(mask, pending, payload, state.err)
+        per_tx_bytes = self.transport.payload_bytes(params)
+
+        # server/worker synchronized advance of the stale bank
+        new_ghat = jax.tree_util.tree_map(
+            lambda h, q: h + _bcast(mask, h) * q.astype(h.dtype),
+            state.ghat, payload)
+
+        # grad_k = sum_m ghat_m^k  (== eq. (5) recursion unrolled)
+        agg = tree_sum_leading(new_ghat)
+        new_params = self.server.apply(params, state.prev_params, agg)
+
+        stats = StepStats(mask=mask, delta_sq=dsq, step_sq=ssq,
+                          agg_grad_sqnorm=tree_sqnorm(agg))
+        new_state = OptState(
+            prev_params=params,
+            ghat=new_ghat,
+            err=new_err,
+            comm=state.comm.update(mask, per_tx_bytes),
+            censor=new_censor,
+        )
+        return new_state, new_params, stats
+
+    def _step_per_tensor(self, state: OptState, params, pending):
+        """Per-tensor censoring (beyond paper; see class docstring).
+
+        The eq.-(8) test is applied independently per parameter tensor;
+        uplink bytes are accounted per transmitted tensor, uplink *count*
+        counts a worker-iteration as transmitting if ANY tensor ships (so
+        the headline count stays comparable with global censoring).
+        Quantization/error-feedback is not combined with this mode.
+        """
+        assert not self.transport.stateful, \
+            "per_tensor + quantized transport not supported"
+        eps1 = self.censor.eps1
+        leaves_delta, treedef = jax.tree_util.tree_flatten(pending)
+        leaves_theta = treedef.flatten_up_to(params)
+        leaves_prev = treedef.flatten_up_to(state.prev_params)
+        leaves_ghat = treedef.flatten_up_to(state.ghat)
+
+        m = self.num_workers
+        new_ghat = []
+        mib_up = jnp.zeros((), jnp.int32)
+        rem_up = jnp.zeros((), jnp.int32)
+        any_mask = jnp.zeros((m,), jnp.float32)
+        for d, t, tp, h in zip(leaves_delta, leaves_theta, leaves_prev,
+                               leaves_ghat):
+            dsq_t = jnp.sum(jnp.square(d.astype(jnp.float32)).reshape(m, -1),
+                            axis=1)                              # (M,)
+            ssq_t = jnp.sum(jnp.square(t.astype(jnp.float32)
+                                       - tp.astype(jnp.float32)))
+            mask_t = (dsq_t > eps1 * ssq_t).astype(jnp.float32)
+            any_mask = jnp.maximum(any_mask, mask_t)
+            n_tx_t = jnp.sum(mask_t).astype(jnp.int32)
+            # exact split-counter byte accounting (accounting.py): leaf
+            # payload is static, so divmod happens in Python; carry per
+            # leaf keeps the traced remainder below int32 range
+            pb_mib, pb_rem = accounting.split_bytes(
+                d[0].size * d.dtype.itemsize)
+            mib_up, rem_up = accounting.carry_bytes(
+                mib_up + n_tx_t * pb_mib, rem_up + n_tx_t * pb_rem)
+            new_ghat.append(h + _bcast(mask_t, h) * d.astype(h.dtype))
+        new_ghat = jax.tree_util.tree_unflatten(treedef, new_ghat)
+
+        agg = tree_sum_leading(new_ghat)
+        new_params = self.server.apply(params, state.prev_params, agg)
+        comm = CommStats(
+            uplink_count=state.comm.uplink_count + any_mask.astype(jnp.int32),
+            uplink_mib=state.comm.uplink_mib,
+            uplink_rem=state.comm.uplink_rem,
+            downlink_count=state.comm.downlink_count + 1,
+            iterations=state.comm.iterations + 1,
+        ).add_bytes_split(mib_up, rem_up)
+        stats = StepStats(mask=any_mask,
+                          delta_sq=delta_sqnorms(pending),
+                          step_sq=step_sqnorm(params, state.prev_params),
+                          agg_grad_sqnorm=tree_sqnorm(agg))
+        new_state = OptState(prev_params=params, ghat=new_ghat,
+                             err=state.err, comm=comm, censor=state.censor)
+        return new_state, new_params, stats

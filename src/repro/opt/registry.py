@@ -1,0 +1,247 @@
+"""String-keyed algorithm registry + config-dict round-tripping.
+
+The registry replaces ``core.baselines.ALGORITHMS``: an algorithm *name*
+maps to a builder that composes stages. Sweeps, the CLI trainer, and
+benchmark artifacts all go through it, so a registered name is runnable
+everywhere a built-in one is.
+
+    from repro import opt
+    o = opt.make("chb", alpha=0.05, num_workers=9)
+    spec = opt.to_spec(o)                  # JSON-able config dict
+    assert opt.from_spec(spec) == o        # round-trips exactly
+
+Builders take ``(alpha, num_workers, **hyper)``. To be sweepable via
+``GridPoint(algo=...)`` a builder should accept (a subset of) the grid's
+keywords — ``beta``, ``eps1``, ``quantize``, ``seed`` — the engine filters
+its keyword set by the builder's signature (``make_for_point``), so a
+builder that ignores an axis simply never sees it.
+
+Register your own in ~20 lines — see ``docs/opt_api.md``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+
+from ..core.censoring import paper_eps1
+from .censor import (AdaptiveCensor, Eq8Censor, NeverCensor,
+                     StochasticCensor)
+from .optimizer import ComposedOptimizer
+from .server import GradientDescent, HeavyBall
+from .transport import DenseTransport, Int8Transport
+
+Builder = Callable[..., ComposedOptimizer]
+
+_ALGORITHMS: dict[str, Builder] = {}
+
+# stage-kind tables: the spec vocabulary for to_spec/from_spec
+CENSOR_KINDS: dict[str, type] = {
+    "never": NeverCensor,
+    "eq8": Eq8Censor,
+    "adaptive": AdaptiveCensor,
+    "stochastic": StochasticCensor,
+}
+TRANSPORT_KINDS: dict[str, type] = {
+    "dense": DenseTransport,
+    "int8": Int8Transport,
+}
+SERVER_KINDS: dict[str, type] = {
+    "gd": GradientDescent,
+    "hb": HeavyBall,
+}
+
+
+def register(name: str) -> Callable[[Builder], Builder]:
+    """Decorator: add a builder to the registry under ``name``."""
+    def deco(fn: Builder) -> Builder:
+        _ALGORITHMS[name] = fn
+        return fn
+    return deco
+
+
+def names() -> tuple[str, ...]:
+    """The registered algorithm names, sorted."""
+    return tuple(sorted(_ALGORITHMS))
+
+
+def _unknown(name: str) -> ValueError:
+    listing = "\n".join(f"  {n}" for n in names())
+    return ValueError(
+        f"unknown algorithm {name!r}; valid names:\n{listing}")
+
+
+def make(name: str, alpha, num_workers: int, **hyper) -> ComposedOptimizer:
+    """Build a registered algorithm by name.
+
+    Args:
+      name: a key in ``names()``; unknown names raise with the valid list
+        (same contract as ``benchmarks/run.py --only``).
+      alpha: server step size (may be traced).
+      num_workers: M (static).
+      **hyper: builder-specific hyperparameters (beta, eps1, tau0, ...).
+    """
+    if name not in _ALGORITHMS:
+        raise _unknown(name)
+    return _ALGORITHMS[name](alpha, num_workers, **hyper)
+
+
+def make_for_point(name: str, alpha, num_workers: int, **hyper
+                   ) -> ComposedOptimizer:
+    """``make`` with ``hyper`` filtered by the builder's signature.
+
+    The sweep engine calls every named point with its full keyword set
+    (beta, eps1, quantize, seed); builders only receive the ones they
+    declare, so e.g. ``gd`` never sees ``beta``.
+    """
+    if name not in _ALGORITHMS:
+        raise _unknown(name)
+    fn = _ALGORITHMS[name]
+    params = inspect.signature(fn).parameters
+    if any(p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()):
+        kw = hyper
+    else:
+        kw = {k: v for k, v in hyper.items() if k in params}
+    return fn(alpha, num_workers, **kw)
+
+
+def _transport(quantize: Optional[str]):
+    if quantize is None:
+        return DenseTransport()
+    if quantize == "int8":
+        return Int8Transport()
+    raise ValueError(f"unknown quantize mode {quantize!r} "
+                     "(expected None or 'int8')")
+
+
+# ------------------------------------------------------ built-in algorithms
+@register("gd")
+def _gd(alpha, num_workers, *, quantize=None, granularity="global",
+        bank_dtype=None) -> ComposedOptimizer:
+    """Classical distributed gradient descent (every worker transmits)."""
+    return ComposedOptimizer(
+        censor=NeverCensor(), transport=_transport(quantize),
+        server=GradientDescent(alpha), num_workers=num_workers,
+        granularity=granularity, bank_dtype=bank_dtype)
+
+
+@register("hb")
+def _hb(alpha, num_workers, *, beta=0.4, quantize=None,
+        granularity="global", bank_dtype=None) -> ComposedOptimizer:
+    """Classical heavy ball (eq. 2); paper default beta=0.4."""
+    return ComposedOptimizer(
+        censor=NeverCensor(), transport=_transport(quantize),
+        server=HeavyBall(alpha, beta), num_workers=num_workers,
+        granularity=granularity, bank_dtype=bank_dtype)
+
+
+@register("lag")
+def _lag(alpha, num_workers, *, eps1=None, eps1_scale=0.1, quantize=None,
+         granularity="global", bank_dtype=None) -> ComposedOptimizer:
+    """Censoring-based GD (LAG-WK, ref. [54]) with the shared eq. (8)."""
+    if eps1 is None:
+        eps1 = paper_eps1(alpha, num_workers, eps1_scale)
+    return ComposedOptimizer(
+        censor=Eq8Censor(eps1), transport=_transport(quantize),
+        server=GradientDescent(alpha), num_workers=num_workers,
+        granularity=granularity, bank_dtype=bank_dtype)
+
+
+@register("chb")
+def _chb(alpha, num_workers, *, beta=0.4, eps1=None, eps1_scale=0.1,
+         quantize=None, granularity="global",
+         bank_dtype=None) -> ComposedOptimizer:
+    """The paper's algorithm with its Sec.-IV default constants."""
+    if eps1 is None:
+        eps1 = paper_eps1(alpha, num_workers, eps1_scale)
+    return ComposedOptimizer(
+        censor=Eq8Censor(eps1), transport=_transport(quantize),
+        server=HeavyBall(alpha, beta), num_workers=num_workers,
+        granularity=granularity, bank_dtype=bank_dtype)
+
+
+@register("csgd")
+def _csgd(alpha, num_workers, *, tau0=None, decay=0.99, eps1=None, seed=0,
+          quantize=None, granularity="global",
+          bank_dtype=None) -> ComposedOptimizer:
+    """CSGD-style stochastically censored GD (Li et al., arXiv:1909.03631).
+
+    Registered purely through composition — the payoff of the stage API:
+    a new censor policy + the existing transport/server stages, zero edits
+    inside any of them. ``tau0`` is the initial squared-norm threshold
+    (``eps1`` is accepted as an alias so the sweep grid's eps axis sweeps
+    it); ``tau0 = 0`` transmits unconditionally, degenerating to gd.
+    """
+    if tau0 is None:
+        tau0 = eps1 if eps1 is not None else 0.0
+    return ComposedOptimizer(
+        censor=StochasticCensor(tau0=tau0, decay=decay, seed=seed),
+        transport=_transport(quantize), server=GradientDescent(alpha),
+        num_workers=num_workers, granularity=granularity,
+        bank_dtype=bank_dtype)
+
+
+# --------------------------------------------------------- spec round-trip
+def _kind_of(stage, table: dict[str, type], what: str) -> str:
+    for kind, cls in table.items():
+        if type(stage) is cls:
+            return kind
+    raise ValueError(
+        f"{what} stage {type(stage).__name__} is not in the spec "
+        f"vocabulary {sorted(table)}; register it to make it serializable")
+
+
+def _stage_spec(stage, table: dict[str, type], what: str) -> dict:
+    spec = {"kind": _kind_of(stage, table, what)}
+    for f in dataclasses.fields(stage):
+        v = getattr(stage, f.name)
+        if hasattr(v, "item"):          # 0-d device array -> Python scalar
+            v = v.item()
+        spec[f.name] = v
+    return spec
+
+
+def _stage_from_spec(spec: dict, table: dict[str, type], what: str):
+    spec = dict(spec)
+    kind = spec.pop("kind", None)
+    if kind not in table:
+        raise ValueError(f"unknown {what} kind {kind!r}; "
+                         f"valid kinds: {sorted(table)}")
+    return table[kind](**spec)
+
+
+def to_spec(o: ComposedOptimizer) -> dict:
+    """The full, JSON-serializable composition of an optimizer.
+
+    Everything needed to rebuild ``o`` exactly — so a benchmark artifact
+    carrying specs is reproducible without the code that built it.
+    """
+    return {
+        "num_workers": o.num_workers,
+        "granularity": o.granularity,
+        "bank_dtype": (None if o.bank_dtype is None
+                       else jnp.dtype(o.bank_dtype).name),
+        "censor": _stage_spec(o.censor, CENSOR_KINDS, "censor"),
+        "transport": _stage_spec(o.transport, TRANSPORT_KINDS, "transport"),
+        "server": _stage_spec(o.server, SERVER_KINDS, "server"),
+    }
+
+
+def from_spec(spec: dict) -> ComposedOptimizer:
+    """Rebuild a ``ComposedOptimizer`` from a ``to_spec`` dict.
+
+    ``from_spec(to_spec(o)) == o`` for every registered composition
+    (pinned by tests/test_opt.py).
+    """
+    bank_dtype = spec.get("bank_dtype")
+    return ComposedOptimizer(
+        censor=_stage_from_spec(spec["censor"], CENSOR_KINDS, "censor"),
+        transport=_stage_from_spec(spec["transport"], TRANSPORT_KINDS,
+                                   "transport"),
+        server=_stage_from_spec(spec["server"], SERVER_KINDS, "server"),
+        num_workers=int(spec["num_workers"]),
+        granularity=spec.get("granularity", "global"),
+        bank_dtype=None if bank_dtype is None else jnp.dtype(bank_dtype),
+    )

@@ -1,0 +1,60 @@
+"""Server updates: how theta advances from the aggregated stale bank.
+
+  * :class:`HeavyBall` — the paper's eq. (4):
+    ``theta^{k+1} = theta^k - alpha*grad_k + beta*(theta^k - theta^{k-1})``.
+  * :class:`GradientDescent` — the beta=0 specialization (classical GD /
+    LAG server). Implemented by delegating to the same formula so GD and
+    HB(beta=0) trajectories are bit-identical by construction.
+
+``alpha``/``beta`` may be traced scalars (the sweep engine). Each scalar
+is pinned to the parameter leaf's dtype before multiplying — a traced
+scalar arrives strongly typed (f64 under x64) and would otherwise silently
+promote an f32 update and double-round, diverging from the static path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+
+def scal(s, leaf: jax.Array) -> jax.Array:
+    """Pin a config scalar to a leaf's dtype before multiplying."""
+    return jnp.asarray(s).astype(leaf.dtype)
+
+
+@runtime_checkable
+class ServerUpdate(Protocol):
+    """Pluggable stage applying the server iterate update."""
+
+    alpha: Any
+
+    def apply(self, params, prev_params, agg):
+        """theta^{k+1} from (theta^k, theta^{k-1}, grad_k)."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class HeavyBall:
+    """The paper's eq.-(4) momentum update."""
+
+    alpha: Any
+    beta: Any = 0.0
+
+    def apply(self, params, prev_params, agg):
+        return jax.tree_util.tree_map(
+            lambda t, g, tp: (t - scal(self.alpha, t) * g.astype(t.dtype)
+                              + scal(self.beta, t) * (t - tp)).astype(t.dtype),
+            params, agg, prev_params)
+
+
+@dataclasses.dataclass(frozen=True)
+class GradientDescent:
+    """Plain distributed GD (eq. 4 with beta = 0)."""
+
+    alpha: Any
+
+    def apply(self, params, prev_params, agg):
+        return HeavyBall(self.alpha, 0.0).apply(params, prev_params, agg)

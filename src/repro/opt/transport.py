@@ -1,0 +1,150 @@
+"""Transports: what bits a transmitted delta carries on the wire.
+
+  * :class:`DenseTransport` — the paper's uplink: the raw delta pytree.
+  * :class:`Int8Transport` — beyond paper (Sec. V's "complementary
+    techniques such as quantization"): symmetric per-tensor int8 with a
+    per-worker scale and error feedback, so worker and server views never
+    diverge (see ``core/quantize.py``).
+
+Like the censor policies, every transport exposes a batched interface
+(leading-M stacked pytrees, used by the composed step) and a row interface
+(one worker's slice, used by the event-driven ``repro.fed`` runtime). The
+two are built from the same quantizer so they agree bit-for-bit.
+
+``stateful`` tells the host whether the error-feedback bank exists — a
+*structural* property (it sizes state buffers), so it is a class variable,
+never traced.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, ClassVar, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from ..core.quantize import (payload_bytes_dense, payload_bytes_int8,
+                             tree_quantize_roundtrip,
+                             tree_quantize_roundtrip_per_worker)
+from ..core.util import tree_stack_zeros
+
+
+def _bcast(mask: jax.Array, leaf: jax.Array) -> jax.Array:
+    """Broadcast a per-worker mask (M,) against a leading-M leaf."""
+    return mask.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
+
+
+@runtime_checkable
+class Transport(Protocol):
+    """Pluggable stage encoding transmitted deltas (+ error feedback)."""
+
+    mode: ClassVar[Optional[str]]   # config token: None | "int8"
+    stateful: ClassVar[bool]        # does the error-feedback bank exist?
+
+    def init(self, params, num_workers: int) -> Any:
+        """Error-feedback state (lives in ``OptState.err``)."""
+        ...
+
+    def prepare(self, delta, err):
+        """Batched: fold the error-feedback residual into the delta."""
+        ...
+
+    def encode(self, pending):
+        """Batched: the payload the receiver reconstructs."""
+        ...
+
+    def feedback(self, mask, pending, payload, err):
+        """Batched: next error-feedback state given the transmit mask."""
+        ...
+
+    def prepare_row(self, delta, err_row):
+        """One worker's ``prepare`` (event runtime)."""
+        ...
+
+    def encode_row(self, pending):
+        """One worker's ``encode`` (event runtime)."""
+        ...
+
+    def feedback_row(self, pending, payload, err_row):
+        """One worker's post-transmit error residual (event runtime)."""
+        ...
+
+    def payload_bytes(self, params) -> int:
+        """Static uplink bytes for one transmission of this pytree."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseTransport:
+    """Raw-delta uplinks (the paper's transport)."""
+
+    mode: ClassVar[Optional[str]] = None
+    stateful: ClassVar[bool] = False
+
+    def init(self, params, num_workers: int):
+        # empty leaves keep the state pytree structure stable across
+        # transports (same contract as the original core/chb.init)
+        return jax.tree_util.tree_map(
+            lambda x: jnp.zeros((0,), x.dtype), params)
+
+    def prepare(self, delta, err):
+        return delta
+
+    def encode(self, pending):
+        return pending
+
+    def feedback(self, mask, pending, payload, err):
+        return err
+
+    def prepare_row(self, delta, err_row):
+        return delta
+
+    def encode_row(self, pending):
+        return pending
+
+    def feedback_row(self, pending, payload, err_row):
+        return err_row
+
+    def payload_bytes(self, params) -> int:
+        return payload_bytes_dense(params)
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8Transport:
+    """Int8 uplinks with per-worker scales and error feedback."""
+
+    mode: ClassVar[Optional[str]] = "int8"
+    stateful: ClassVar[bool] = True
+
+    def init(self, params, num_workers: int):
+        return tree_stack_zeros(params, num_workers)
+
+    def prepare(self, delta, err):
+        return jax.tree_util.tree_map(
+            lambda d, e: jnp.add(d, e.astype(d.dtype)), delta, err)
+
+    def encode(self, pending):
+        # per-worker scales: worker m quantizes its own delta slice
+        return tree_quantize_roundtrip_per_worker(pending)
+
+    def feedback(self, mask, pending, payload, err):
+        return jax.tree_util.tree_map(
+            lambda p, q, e: _bcast(mask, p) * (p - q)
+            + (1.0 - _bcast(mask, p)) * e.astype(p.dtype),
+            pending, payload,
+            jax.tree_util.tree_map(
+                lambda e, p: e.astype(p.dtype), err, pending))
+
+    def prepare_row(self, delta, err_row):
+        return jax.tree_util.tree_map(
+            lambda d, e: d + e.astype(d.dtype), delta, err_row)
+
+    def encode_row(self, pending):
+        return tree_quantize_roundtrip(pending)
+
+    def feedback_row(self, pending, payload, err_row):
+        return jax.tree_util.tree_map(
+            lambda p, q: p - q, pending, payload)
+
+    def payload_bytes(self, params) -> int:
+        return payload_bytes_int8(params)

@@ -4,11 +4,12 @@ Every grid point is one Algorithm-1 run (``core/simulator.trajectory``).
 Instead of re-tracing and re-jitting ``simulator.run`` per point — which is
 what made dense hyperparameter frontiers dispatch-bound — the engine:
 
-  1. partitions the grid by its *static* axes (num_workers, quantize),
-     which genuinely change the compiled program;
-  2. inside each partition, stacks the *traced* axes (alpha, beta, eps1,
-     task index) into device arrays and maps the pure trajectory over them
-     with ``lax.map`` (default) or ``vmap`` (``vectorize=True``);
+  1. partitions the grid by its *static* axes (num_workers, quantize,
+     seed, named ``algo``; plus eps1 under per-tensor granularity), which
+     genuinely change the compiled program;
+  2. inside each partition, stacks the *traced* axes (alpha, beta, eps1)
+     into device arrays and maps the pure trajectory over them with
+     ``lax.map`` (default) or ``vmap`` (``vectorize=True``);
   3. jits each partition once, so a 32-point grid pays one compilation
      instead of 32.
 
@@ -40,9 +41,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import opt as opt_mod
 from ..core import simulator
-from ..core.chb import FedOptConfig
 from ..core.simulator import FedTask, History
+from ..opt import (ComposedOptimizer, DenseTransport, Eq8Censor, HeavyBall,
+                   NeverCensor, as_optimizer)
+from ..opt.registry import _transport
 from .grid import ConfigGrid, GridPoint
 
 TaskFactory = Callable[[int, int], FedTask]
@@ -56,11 +60,65 @@ def _float_dtype():
     return jnp.result_type(float)   # f64 under jax_enable_x64, else f32
 
 
+def _base_optimizer(base_cfg, m: int) -> ComposedOptimizer:
+    """The partition's template composition (num_workers not yet bound)."""
+    if base_cfg is None:
+        return ComposedOptimizer(
+            censor=NeverCensor(), transport=DenseTransport(),
+            server=HeavyBall(0.0, 0.0), num_workers=m)
+    base = as_optimizer(base_cfg)
+    if not isinstance(base, ComposedOptimizer):
+        raise TypeError(
+            "base_cfg must be a ComposedOptimizer (or a legacy "
+            "FedOptConfig); arbitrary FedOptimizers have no sweepable "
+            f"(alpha, beta, eps1) hooks: {type(base).__name__}")
+    return base
+
+
+def _named_axes(p: GridPoint) -> tuple[bool, bool]:
+    """Which optional grid axes a named-``algo`` point explicitly set.
+
+    ``GridPoint``'s 0.0 defaults mean "unset" for named points: a default
+    axis is *omitted* from the builder call so the algorithm's registered
+    defaults apply (``GridPoint(algo="chb")`` must run the paper's chb,
+    not a beta=0/eps1=0 impostor labeled chb). The flags are part of the
+    partition key — they change which scalars the compiled program traces.
+    """
+    return (p.beta != 0.0, p.eps1 != 0.0)
+
+
+def _point_optimizer(p: GridPoint, m: int, base_cfg,
+                     *, alpha=None, beta=None, eps1=None) -> ComposedOptimizer:
+    """The optimizer a grid point describes.
+
+    Called twice per point: host-side with concrete floats (for
+    ``SweepResult.specs``) and inside the trace with device scalars (the
+    ``alpha``/``beta``/``eps1`` overrides). Named-``algo`` points build
+    through the registry; continuum points rebind the template's
+    hyperparameters.
+    """
+    alpha = p.alpha if alpha is None else alpha
+    beta = p.beta if beta is None else beta
+    eps1 = p.eps1 if eps1 is None else eps1
+    if p.algo is not None:
+        beta_set, eps_set = _named_axes(p)
+        kw = {"quantize": p.quantize, "seed": p.seed}
+        if beta_set:
+            kw["beta"] = beta
+        if eps_set:
+            kw["eps1"] = eps1
+        return opt_mod.make_for_point(p.algo, alpha, m, **kw)
+    base = _base_optimizer(base_cfg, m)
+    o = dataclasses.replace(base, num_workers=m,
+                            transport=_transport(p.quantize))
+    return o.with_hparams(alpha=alpha, beta=beta, eps1=eps1)
+
+
 def run_sweep(grid: Union[ConfigGrid, Sequence[GridPoint]],
               task: Optional[FedTask] = None, *,
               num_iters: int,
               task_factory: Optional[TaskFactory] = None,
-              base_cfg: Optional[FedOptConfig] = None,
+              base_cfg=None,
               vectorize: bool = False) -> "SweepResult":
     """Run every grid point as (a few) single compiled device programs.
 
@@ -72,9 +130,12 @@ def run_sweep(grid: Union[ConfigGrid, Sequence[GridPoint]],
       num_iters: scan length K for every point.
       task_factory: ``(seed, num_workers) -> FedTask``; required when the
         grid sweeps seeds or worker counts beyond the shared task.
-      base_cfg: template for config fields outside the grid axes
-        (``granularity``, ``bank_dtype``, ``adaptive``, ...); its
-        alpha/beta/eps1/num_workers/quantize are overridden per point.
+      base_cfg: template for composition choices outside the grid axes —
+        a ``repro.opt.ComposedOptimizer`` (or legacy ``FedOptConfig``)
+        whose granularity / bank_dtype / censor family (e.g. adaptive) are
+        kept; its alpha/beta/eps1/num_workers/quantize are overridden per
+        point. Ignored by named-``algo`` points, which build through the
+        registry.
       vectorize: ``False`` (default) = ``lax.map``, bit-exact vs
         ``simulator.run``; ``True`` = ``vmap``, faster on large grids but
         ulp-divergent (see module docstring).
@@ -91,14 +152,43 @@ def run_sweep(grid: Union[ConfigGrid, Sequence[GridPoint]],
     if not points:
         raise ValueError("empty grid")
 
-    # ---- partition by the static axes (worker count, quantize, seed) ----
+    granularity = "global" if base_cfg is None else \
+        getattr(as_optimizer(base_cfg), "granularity", "global")
+
+    if base_cfg is not None:
+        # a censor without an eps1 hook (adaptive/stochastic/custom) keeps
+        # its own thresholds (see with_hparams), so a varying eps axis
+        # would produce N identical trajectories labeled as distinct
+        # points — refuse loudly rather than plot a flat "frontier"
+        base_censor = getattr(as_optimizer(base_cfg), "censor", None)
+        if base_censor is not None and \
+                not isinstance(base_censor, (Eq8Censor, NeverCensor)):
+            eps_axis = {p.eps1 for p in points if p.algo is None}
+            if len(eps_axis) > 1:
+                raise ValueError(
+                    f"base_cfg censor {type(base_censor).__name__} has no "
+                    "eps1 hook, so the grid's varying eps1 axis "
+                    f"({sorted(eps_axis)[:4]}...) would be silently "
+                    "ignored; sweep its own threshold via named "
+                    "GridPoint(algo=...) points instead")
+
+    # ---- partition by the static axes (worker count, quantize, seed,
+    # named algorithm; plus eps1 under per_tensor granularity, whose byte
+    # accounting needs a static threshold) ----
     groups: dict[tuple, list[int]] = {}
     for i, p in enumerate(points):
         m = p.num_workers if p.num_workers is not None else m_default
         if m is None:
             raise ValueError(
                 f"point {i} has no num_workers and no task to infer it from")
-        groups.setdefault((m, p.quantize, p.seed), []).append(i)
+        eps_static = p.eps1 if (granularity == "per_tensor"
+                                and p.algo is None) else None
+        # named points additionally partition by which optional axes they
+        # set (see _named_axes): set vs builder-default axes trace
+        # different scalars, i.e. different compiled programs
+        axes = _named_axes(p) if p.algo is not None else None
+        groups.setdefault((m, p.quantize, p.seed, p.algo, eps_static, axes),
+                          []).append(i)
 
     if task_factory is None and any(k[2] != 0 for k in groups):
         # a shared task has no seed axis: silently running it under a
@@ -107,8 +197,9 @@ def run_sweep(grid: Union[ConfigGrid, Sequence[GridPoint]],
             "non-default seeds need a task_factory(seed, num_workers)")
 
     histories: list[Optional[History]] = [None] * len(points)
+    specs: list[Optional[dict]] = [None] * len(points)
     elapsed = 0.0
-    for (m, quant, seed), idxs in groups.items():
+    for (m, quant, seed, algo, eps_static, axes), idxs in groups.items():
         if task_factory is not None:
             group_task = task_factory(seed, m)
         else:
@@ -117,29 +208,38 @@ def run_sweep(grid: Union[ConfigGrid, Sequence[GridPoint]],
             raise ValueError(
                 f"group needs a task with num_workers={m}; pass a "
                 "task_factory to sweep worker counts")
+        for i in idxs:     # full composition of each point, host-side
+            try:
+                specs[i] = opt_mod.to_spec(
+                    _point_optimizer(points[i], m, base_cfg))
+            except ValueError:
+                # a custom stage class outside the spec vocabulary (see
+                # opt.CENSOR_KINDS etc.) is still perfectly sweepable —
+                # record no spec rather than refusing to run the grid
+                specs[i] = None
         t0 = time.perf_counter()
-        group_hist = _run_group([points[i] for i in idxs], m, quant,
-                                group_task, base_cfg, num_iters, vectorize)
+        group_hist = _run_group([points[i] for i in idxs], m, base_cfg,
+                                eps_static, group_task, num_iters,
+                                vectorize)
         elapsed += time.perf_counter() - t0
         for j, i in enumerate(idxs):
             histories[i] = jax.tree_util.tree_map(lambda x: x[j], group_hist)
     return SweepResult(points=points, num_iters=num_iters,
                        histories=tuple(histories), elapsed_s=elapsed,
-                       num_programs=len(groups))
+                       num_programs=len(groups), specs=tuple(specs))
 
 
-def _run_group(pts: list[GridPoint], m: int, quant: Optional[str],
-               task: FedTask, base_cfg: Optional[FedOptConfig],
+def _run_group(pts: list[GridPoint], m: int, base_cfg,
+               eps_static: Optional[float], task: FedTask,
                num_iters: int, vectorize: bool) -> History:
     """Compile and execute one static partition; returns a stacked History.
 
     The task is closed over (program constants), matching ``simulator.run``
-    bit-for-bit; only (alpha, beta, eps1) live in device arrays.
+    bit-for-bit; only (alpha, beta, eps1) live in device arrays. Every
+    point of the partition shares its quantize/seed/algo statics, so the
+    representative ``pts[0]`` decides them.
     """
-    base = base_cfg if base_cfg is not None else \
-        FedOptConfig(alpha=0.0, num_workers=m)
-    cfg_g = dataclasses.replace(base, num_workers=m, quantize=quant)
-
+    rep = pts[0]
     ftype = _float_dtype()
     pts_dev = (jnp.asarray([p.alpha for p in pts], ftype),
                jnp.asarray([p.beta for p in pts], ftype),
@@ -147,8 +247,11 @@ def _run_group(pts: list[GridPoint], m: int, quant: Optional[str],
 
     def one_point(point):
         alpha, beta, eps1 = point
-        cfg = dataclasses.replace(cfg_g, alpha=alpha, beta=beta, eps1=eps1)
-        return simulator.trajectory(cfg, task, num_iters)
+        if eps_static is not None:      # per_tensor: eps1 closed over
+            eps1 = eps_static
+        o = _point_optimizer(rep, m, base_cfg,
+                             alpha=alpha, beta=beta, eps1=eps1)
+        return simulator.trajectory(o, task, num_iters)
 
     if vectorize:
         program = jax.jit(jax.vmap(one_point))
@@ -170,12 +273,18 @@ class SweepResult:
       histories: one host-side (numpy-leaved) ``History`` per point.
       elapsed_s: wall-clock seconds for all device programs (compile+run).
       num_programs: how many static partitions were compiled.
+      specs: the full ``repro.opt`` registry spec of each point's
+        optimizer (``opt.from_spec(specs[i])`` rebuilds it exactly), so an
+        exported artifact is reproducible without the code that made it.
+        ``None`` for points whose composition uses a custom stage class
+        not registered in the spec vocabulary (``opt.CENSOR_KINDS`` &co).
     """
     points: tuple[GridPoint, ...]
     num_iters: int
     histories: tuple[History, ...]
     elapsed_s: float
     num_programs: int
+    specs: tuple[dict, ...] = ()
 
     def __len__(self) -> int:
         return len(self.points)
@@ -264,6 +373,7 @@ class SweepResult:
             "num_programs": self.num_programs,
             "elapsed_s": self.elapsed_s,
             "points": [p._asdict() for p in self.points],
+            "specs": list(self.specs),
             "uplink_bytes": self.uplink_bytes.tolist(),
         }
         if include_trajectories:

@@ -36,12 +36,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.censoring import delta_sqnorms, step_sqnorm, transmit_mask
-from ..core.chb import FedOptConfig, _bcast
+from ..core.censoring import delta_sqnorms, step_sqnorm
 from ..core.quantize import payload_bytes_dense
 from ..core.simulator import FedTask, global_loss
 from ..core.util import tree_sqnorm, tree_stack_zeros, tree_sum_leading
 from ..fed.energy import EnergyModel
+from ..opt import AdaptiveCensor, as_optimizer
+from ..opt.transport import _bcast
 
 
 class FedScenarioPoint(NamedTuple):
@@ -79,16 +80,19 @@ class FedScenarioGrid:
                 self.loss_prob, self.participation, self.quorum, self.seed))
 
 
-def run_fed_sweep(cfg: FedOptConfig, task: FedTask,
+def run_fed_sweep(cfg, task: FedTask,
                   grid, num_rounds: int, *,
                   energy: Optional[EnergyModel] = None,
                   vectorize: bool = False) -> "FedSweepResult":
     """Sweep deployment scenarios for one algorithm as one device program.
 
     Args:
-      cfg: the (static) algorithm configuration shared by every scenario;
-        must use ``quantize=None``, ``granularity="global"``, ``adaptive=0``
-        (the modes the synchronous-round model covers).
+      cfg: the algorithm shared by every scenario — a ``repro.opt``
+        optimizer (or legacy ``FedOptConfig``); must use a dense transport,
+        ``granularity="global"``, and a non-adaptive censor policy (the
+        modes the synchronous-round model covers; the adaptive EMA's
+        cohort-wide state update is ill-defined under partial
+        participation).
       task: the distributed problem.
       grid: a ``FedScenarioGrid`` or explicit ``FedScenarioPoint`` sequence.
       num_rounds: synchronous server rounds R per scenario.
@@ -100,17 +104,24 @@ def run_fed_sweep(cfg: FedOptConfig, task: FedTask,
       A ``FedSweepResult`` with objective/uplink/bytes/energy trajectories
       per scenario.
     """
-    if cfg.quantize is not None:
-        raise NotImplementedError("fed sweep supports quantize=None only")
-    if cfg.granularity != "global":
+    opt = as_optimizer(cfg)
+    if getattr(opt, "censor", None) is None or \
+            getattr(opt, "server", None) is None:
+        raise TypeError(
+            "run_fed_sweep drives the censor/server stages directly, so "
+            "it needs a ComposedOptimizer (or an optimizer exposing those "
+            f"stage attributes), not {type(opt).__name__}")
+    if opt.quantize is not None:
+        raise NotImplementedError("fed sweep supports dense transport only")
+    if opt.granularity != "global":
         raise NotImplementedError("fed sweep supports granularity='global'")
-    if cfg.adaptive > 0:
+    if isinstance(opt.censor, AdaptiveCensor):
         raise NotImplementedError("fed sweep does not cover adaptive mode")
     points = grid.points() if isinstance(grid, FedScenarioGrid) \
         else tuple(grid)
     m = jax.tree_util.tree_leaves(task.worker_data)[0].shape[0]
-    if cfg.num_workers != m:
-        raise ValueError(f"cfg.num_workers={cfg.num_workers} != task M={m}")
+    if opt.num_workers != m:
+        raise ValueError(f"cfg.num_workers={opt.num_workers} != task M={m}")
     energy = energy if energy is not None else EnergyModel()
 
     worker_grads_fn = jax.vmap(task.grad_fn, in_axes=(None, 0))
@@ -119,7 +130,7 @@ def run_fed_sweep(cfg: FedOptConfig, task: FedTask,
         loss_p, part, quo, seed = point
 
         def one_round(carry, _):
-            params, prev, ghat, key = carry
+            params, prev, ghat, key, cstate = carry
             key, k_part, k_drop = jax.random.split(key, 3)
             participate = (jax.random.uniform(k_part, (m,)) < part
                            ).astype(jnp.float32)
@@ -128,8 +139,7 @@ def run_fed_sweep(cfg: FedOptConfig, task: FedTask,
                 lambda g, h: g.astype(h.dtype) - h, grads, ghat)
             dsq = delta_sqnorms(delta)
             ssq = step_sqnorm(params, prev)
-            censor_pass = transmit_mask(dsq, ssq, cfg.eps1) \
-                if cfg.eps1 > 0 else jnp.ones((m,), jnp.float32)
+            censor_pass, new_cstate = opt.censor.decide(cstate, dsq, ssq)
             transmit = participate * censor_pass
             dropped = (jax.random.uniform(k_drop, (m,)) < loss_p
                        ).astype(jnp.float32) * transmit
@@ -140,10 +150,7 @@ def run_fed_sweep(cfg: FedOptConfig, task: FedTask,
                 lambda h, q: h + _bcast(delivered, h) * q.astype(h.dtype),
                 ghat, delta)
             agg = tree_sum_leading(new_ghat)
-            upd = jax.tree_util.tree_map(
-                lambda t, g, tp: (t - cfg.alpha * g.astype(t.dtype)
-                                  + cfg.beta * (t - tp)).astype(t.dtype),
-                params, agg, prev)
+            upd = opt.server.apply(params, prev, agg)
             arrived = participate - dropped     # beacons count, drops don't
             cohort = jnp.sum(participate)
             met = (jnp.sum(arrived) >= jnp.ceil(quo * cohort)) & (cohort > 0)
@@ -154,13 +161,14 @@ def run_fed_sweep(cfg: FedOptConfig, task: FedTask,
             rec = (global_loss(task, params), tree_sqnorm(agg),
                    transmit.astype(jnp.int8), delivered.astype(jnp.int8),
                    participate.astype(jnp.int8), met)
-            return (new_params, new_prev, new_ghat, key), rec
+            return (new_params, new_prev, new_ghat, key, new_cstate), rec
 
         p0 = task.init_params
         ghat0 = tree_stack_zeros(p0, m)
         key0 = jax.random.PRNGKey(seed)
         _, recs = jax.lax.scan(
-            one_round, (p0, p0, ghat0, key0), None, length=num_rounds)
+            one_round, (p0, p0, ghat0, key0, opt.censor.init(m)), None,
+            length=num_rounds)
         return recs
 
     ftype = jnp.result_type(float)

@@ -7,13 +7,14 @@ task PRNG seed, quantization mode, and worker count M. ``grid.points()``
 enumerates it into concrete :class:`GridPoint` tuples, which is what
 ``repro.sweep.run_sweep`` consumes.
 
-Axes fall into two classes (see ``core/chb.py``):
+Axes fall into two classes (see ``repro/opt``):
 
-  * **traced axes** — ``alpha``, ``beta``, ``eps1``/``eps1_scale``, ``seed``.
+  * **traced axes** — ``alpha``, ``beta``, ``eps1``/``eps1_scale``.
     Points differing only here run inside ONE compiled program.
-  * **static axes** — ``quantize`` and ``num_workers`` change the compiled
-    program's structure; the engine partitions the grid into one compiled
-    group per distinct (num_workers, quantize) pair.
+  * **static axes** — ``quantize``, ``num_workers``, ``seed`` (it selects
+    the closed-over task), and a named ``algo`` (it selects the stage
+    composition) change the compiled program's structure; the engine
+    partitions the grid into one compiled group per distinct combination.
 
 Point order is the row-major cartesian product in field order
 (alpha, beta, eps, seed, quantize, num_workers) — stable, so sweep results
@@ -34,11 +35,21 @@ class GridPoint(NamedTuple):
     Attributes:
       alpha: step size.
       beta: heavy-ball momentum (0 => GD/LAG family).
-      eps1: absolute censoring threshold (0 => no censoring).
+      eps1: absolute censoring threshold (0 => no censoring). For a named
+        ``algo`` the builder may reinterpret it (e.g. ``csgd`` reads it as
+        the initial threshold ``tau0``). For named points, ``beta``/
+        ``eps1`` left at their 0.0 defaults are treated as *unset* — the
+        algorithm's registered defaults apply (``GridPoint(algo="chb")``
+        runs the paper's chb, not a beta=0/eps1=0 variant).
       seed: task PRNG seed — selects which stacked task instance the point
-        runs on (data generation happens host-side in the task factory).
+        runs on (data generation happens host-side in the task factory);
+        also forwarded to seeded censor policies of named algorithms.
       quantize: ``None`` or ``"int8"`` (static axis).
       num_workers: M, or ``None`` to inherit the task's worker count.
+      algo: ``None`` for the default eq.-(8)/heavy-ball continuum (gd, hb,
+        lag, chb are all points of it), or a ``repro.opt`` registry name —
+        the point is then built via ``opt.make_for_point`` and compiles as
+        its own static partition.
     """
     alpha: float
     beta: float = 0.0
@@ -46,10 +57,14 @@ class GridPoint(NamedTuple):
     seed: int = 0
     quantize: Optional[str] = None
     num_workers: Optional[int] = None
+    algo: Optional[str] = None
 
     @property
     def algo_name(self) -> str:
-        """gd/hb/lag/chb classification of this point (paper Sec. II)."""
+        """gd/hb/lag/chb classification of this point (paper Sec. II),
+        or the registry name for named-algorithm points."""
+        if self.algo is not None:
+            return self.algo
         if self.eps1 > 0 and self.beta > 0:
             return "chb"
         if self.eps1 > 0:

@@ -11,12 +11,11 @@ import time
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from .. import opt
 from ..configs.base import ModelConfig
 from ..core import distributed
-from ..core.baselines import ALGORITHMS
 from ..core.chb import FedOptConfig
 from ..checkpoint import checkpoint as ckpt
 from ..data import lm_data
@@ -45,20 +44,44 @@ class TrainConfig:
     moe_mode: str = "scan"
 
 
-def make_fed_config(tc: TrainConfig, mesh=None) -> FedOptConfig:
-    m = mesh.shape["pod"] if (tc.strategy == "pod" and mesh is not None) \
+def _worker_count(tc: TrainConfig, mesh=None) -> int:
+    return mesh.shape["pod"] if (tc.strategy == "pod" and mesh is not None) \
         else tc.num_workers
-    base = ALGORITHMS[tc.algorithm](tc.alpha, m)
-    eps1 = base.eps1
+
+
+def make_optimizer(tc: TrainConfig, mesh=None) -> opt.ComposedOptimizer:
+    """Resolve ``tc.algorithm`` through the ``repro.opt`` registry.
+
+    Any registered name is accepted, but the distributed execution
+    strategies (``core/distributed``) only realize eq.-(8)/uncensored
+    policies with dense or int8 transport — anything else raises here
+    rather than silently running uncensored.
+    """
+    m = _worker_count(tc, mesh)
+    kw = {"quantize": tc.quantize}
+    if tc.algorithm == "hb":
+        kw["beta"] = tc.beta
     if tc.algorithm in ("lag", "chb"):
-        eps1 = tc.eps1_scale / (tc.alpha ** 2 * m ** 2)
-    return dataclasses.replace(base, beta=base.beta if tc.algorithm != "hb"
-                               else tc.beta, eps1=eps1, quantize=tc.quantize)
+        kw["eps1_scale"] = tc.eps1_scale
+    o = opt.make(tc.algorithm, tc.alpha, m, **kw)
+    if not isinstance(o.censor, (opt.NeverCensor, opt.Eq8Censor)):
+        raise NotImplementedError(
+            f"algorithm {tc.algorithm!r} uses censor policy "
+            f"{type(o.censor).__name__}, which the scan/pod training "
+            "strategies do not realize (eq.-8 / uncensored only)")
+    return o
+
+
+def make_fed_config(tc: TrainConfig, mesh=None) -> FedOptConfig:
+    """DEPRECATED: the legacy-config view of ``make_optimizer``."""
+    o = make_optimizer(tc, mesh)
+    return FedOptConfig(alpha=o.alpha, num_workers=o.num_workers,
+                        beta=o.beta, eps1=o.eps1, quantize=o.quantize)
 
 
 def train(cfg: ModelConfig, tc: TrainConfig, mesh=None, verbose=True):
     """Returns (params, state, history list of metric dicts)."""
-    fcfg = make_fed_config(tc, mesh)
+    fcfg = make_optimizer(tc, mesh)
     m = fcfg.num_workers
 
     act = None

@@ -33,7 +33,8 @@ def test_markdown_files_exist():
     files = list(_markdown_files())
     names = {p.relative_to(REPO).as_posix() for p in files}
     for required in ("README.md", "docs/architecture.md",
-                     "docs/paper_map.md", "docs/sweep_guide.md"):
+                     "docs/paper_map.md", "docs/sweep_guide.md",
+                     "docs/opt_api.md"):
         assert required in names, f"missing {required}"
 
 
@@ -51,6 +52,36 @@ def test_intra_repo_links_resolve(md):
         if not (md.parent / path).exists():
             broken.append(target)
     assert not broken, f"{md.name}: broken relative links {broken}"
+
+
+def test_opt_api_code_executes():
+    """Doc-sync: run every ```python block of docs/opt_api.md, in order,
+    in one shared namespace — the add-your-own-algorithm tutorial (and the
+    registry/spec claims around it) can never rot."""
+    guide = (REPO / "docs" / "opt_api.md").read_text()
+    blocks = _CODE_BLOCK_RE.findall(guide)
+    assert len(blocks) >= 5, "tutorial structure changed: update this test"
+    ns = {"__name__": "opt_api_doc"}
+    # the tutorial registers an algorithm + censor kind; snapshot the
+    # global registries so other tests stay order-independent
+    from repro import opt
+    from repro.opt import registry as opt_registry
+    algos_before = dict(opt_registry._ALGORITHMS)
+    censors_before = dict(opt.CENSOR_KINDS)
+    try:
+        for i, block in enumerate(blocks):
+            try:
+                exec(compile(block, f"opt_api.md[block {i}]", "exec"), ns)
+            except Exception as e:     # pragma: no cover - failure reporting
+                pytest.fail(f"opt_api.md code block {i} failed: {e!r}")
+        # the tutorial's headline claims came out true
+        assert "roundrobin" in opt.names()
+        assert isinstance(ns["legacy"].build(), opt.ComposedOptimizer)
+    finally:
+        opt_registry._ALGORITHMS.clear()
+        opt_registry._ALGORITHMS.update(algos_before)
+        opt.CENSOR_KINDS.clear()
+        opt.CENSOR_KINDS.update(censors_before)
 
 
 def test_sweep_guide_code_executes():

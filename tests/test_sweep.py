@@ -136,6 +136,32 @@ def test_sweep_seed_axis_requires_factory(linreg):
         sweep.run_sweep(pts, task=linreg.task, num_iters=5)
 
 
+def test_sweep_per_tensor_granularity_exact(linreg):
+    """Per-tensor censoring sweeps too: eps1 becomes a static partition
+    axis (its byte accounting divmods host-side), and every point stays
+    bit-exact vs the per-point simulator run."""
+    from repro import opt
+    a = linreg.alpha_paper
+    base = opt.make("chb", a, 5, granularity="per_tensor")
+    eps = paper_eps1(a, 5)
+    points = [sweep.GridPoint(alpha=a, beta=0.4, eps1=eps),
+              sweep.GridPoint(alpha=a, beta=0.4, eps1=2 * eps),
+              sweep.GridPoint(alpha=a * 0.5, beta=0.4, eps1=eps)]
+    res = sweep.run_sweep(points, task=linreg.task, num_iters=80,
+                          base_cfg=base)
+    assert res.num_programs == 2      # one per distinct static eps1
+    for p, hist in zip(points, res.histories):
+        ref = simulator.run(
+            opt.make("chb", p.alpha, 5, beta=p.beta, eps1=p.eps1,
+                     granularity="per_tensor"), linreg.task, 80)
+        _assert_history_equal(hist, ref)
+    # per-tensor masks really differ from global censoring on this grid
+    ref_global = simulator.run(opt.make("chb", a, 5, eps1=eps),
+                               linreg.task, 80)
+    assert (np.asarray(res.histories[0].mask)
+            != np.asarray(ref_global.mask)).any()
+
+
 def test_sweep_float32_task_exact_under_x64():
     """Bit-exactness must hold for f32 tasks too: traced alpha/beta arrive
     as strong f64 scalars under x64 and used to promote (and double-round)
