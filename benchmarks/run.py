@@ -33,6 +33,7 @@ BENCH_NAMES = (
     "fig12_descent",
     "serving",
     "roofline",
+    "kernel_roofline",
 )
 
 

@@ -50,6 +50,7 @@ from ..core.censoring import step_sqnorm
 from ..core.quantize import payload_bytes_dense
 from ..core.simulator import FedTask, global_loss
 from ..core.util import (tree_sqnorm, tree_sum_leading, tree_worker_slice)
+from ..kernels import ops as kernel_ops
 from ..opt import as_optimizer
 from ..opt.optimizer import ComposedOptimizer
 from .channel import ChannelConfig
@@ -138,13 +139,25 @@ def _compile(opt: ComposedOptimizer, task: FedTask):
     evaluate one worker's upload at whatever wall-clock moment it finishes
     computing, while staying draw- and bit-compatible with the batched
     simulator step.
+
+    A ``backend="pallas"`` composition routes its parameter-sized sweeps
+    through the same fused kernels here as in the batched step: the
+    eq.-(8) norm runs the M=1 row of the batched sqnorm kernel (identical
+    tile partials, so censor decisions match the simulator bit-for-bit)
+    and the server advances through ``opt.apply_server`` (the fused
+    eq.-(4) kernel with traced alpha/beta).
     """
+    pallas = getattr(opt, "backend", "reference") == "pallas"
+
     def client_eval(params, data_i, ghat_row, err_row, ssq, rnd, worker):
         g = task.grad_fn(params, data_i)
         delta = jax.tree_util.tree_map(
             lambda x, h: x.astype(h.dtype) - h, g, ghat_row)
         pending = opt.transport.prepare_row(delta, err_row)
-        dsq = tree_sqnorm(pending)   # f32 accumulation == delta_sqnorms row
+        if pallas:                   # fused row of the batched kernel
+            dsq = kernel_ops.tree_sqnorm_row(pending)
+        else:
+            dsq = tree_sqnorm(pending)   # f32 acc == delta_sqnorms row
         transmit = opt.censor.client_decide(rnd, worker, dsq, ssq)
         payload = opt.transport.encode_row(pending)
         new_err = opt.transport.feedback_row(pending, payload, err_row)
@@ -154,9 +167,12 @@ def _compile(opt: ComposedOptimizer, task: FedTask):
         return jax.tree_util.tree_map(
             lambda h, q: h.at[i].add(q.astype(h.dtype)), ghat, payload)
 
+    apply_server = getattr(opt, "apply_server", None) or \
+        (lambda p, pp, agg: opt.server.apply(p, pp, agg))
+
     def server_update(params, prev_params, ghat):
         agg = tree_sum_leading(ghat)
-        new_params = opt.server.apply(params, prev_params, agg)
+        new_params = apply_server(params, prev_params, agg)
         # ||theta^{k+1} - theta^k||^2, broadcast with theta^{k+1} so the next
         # cohort runs the eq. (8) test with exactly the batched step norm
         next_ssq = step_sqnorm(new_params, params)

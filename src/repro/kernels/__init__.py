@@ -1,1 +1,2 @@
-from . import censor, decode_attention, flash_attention, hb_update, ops, ref
+from . import (censor, common, decode_attention, flash_attention, hb_update,
+               ops, quantize_ef, ref)

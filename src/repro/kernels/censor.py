@@ -2,20 +2,31 @@
 
 Naively, the eq.-(8) test + bank advance costs three HBM sweeps per
 parameter tensor per worker: (1) delta = g - ghat, (2) ||delta||^2
-reduction, (3) select ghat' = g or ghat. We fuse into two single-sweep
+reduction, (3) select ghat' = g or ghat. We fuse into single-sweep
 kernels:
 
   censor_delta_sqnorm : one pass, emits per-tile partial sums of
                         ||g - ghat||^2 (f32 accumulation in VMEM)
   censor_select       : one pass, ghat' = transmit ? g : ghat
 
-Block shapes are (8k, 128)-aligned for f32 / (16k, 128) for bf16 VMEM tiles.
+plus the leading-M batched variants the ``repro.opt`` pallas backend
+dispatches through (see ``ops.py``): ``censor_delta_sqnorm_batched`` /
+``sqnorm_batched`` (per-worker eq.-(8) partials over the stacked bank,
+without ever materializing the delta tree) and ``censor_bank_advance`` /
+``bank_advance`` (the fused bank advance ``ghat + mask * delta``, written
+in the arithmetic mask form so it is bit-identical to the reference jnp
+step).
 
-Both kernels default to ``interpret=True`` — the Pallas interpreter, which
-runs on any backend (including the CPU-only CI container) and is what the
-tier-1 suite validates against the ``kernels/ref.py`` oracles. On real TPU
-hardware pass ``interpret=False`` to lower through Mosaic and get the fused
-single-sweep performance; numerics are identical either way.
+Tiles are (block_rows, 128) VMEM blocks — ``block_rows=256`` by default,
+shrunk to the tensor's own row count for small tensors (``common.tile_rows``).
+Per-worker masks and the transmit flag ride in SMEM scalar blocks.
+
+Kernels default to ``interpret=None``, resolved by
+``common.interpret_default()``: the Pallas interpreter everywhere except a
+real TPU backend, where they lower through Mosaic for the fused
+single-sweep performance. Direct calls and the ``ops.py`` wrappers share
+that rule, so neither entry point silently ships interpreter performance
+on TPU. Numerics are identical either way.
 """
 from __future__ import annotations
 
@@ -24,23 +35,23 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import (_LANES, _pad_to_2d, _pad_to_3d, block_for,
+                     resolve_interpret)
+
+__all__ = [
+    "censor_delta_sqnorm", "censor_select",
+    "censor_delta_sqnorm_batched", "sqnorm_batched",
+    "censor_bank_advance", "bank_advance",
+]
 
 
-_LANES = 128
+def _smem_scalar(index_map):
+    return pl.BlockSpec((1, 1), index_map, memory_space=pltpu.SMEM)
 
 
-def _pad_to_2d(x: jax.Array, rows: int) -> jax.Array:
-    """Flatten to (R, 128) padding with zeros; R a multiple of `rows`."""
-    flat = x.reshape(-1)
-    n = flat.shape[0]
-    cols = _LANES
-    r = math.ceil(n / cols)
-    r = math.ceil(r / rows) * rows
-    pad = r * cols - n
-    flat = jnp.pad(flat, (0, pad))
-    return flat.reshape(r, cols)
-
-
+# --------------------------------------------------- single-tensor kernels
 def _delta_sqnorm_kernel(g_ref, h_ref, out_ref):
     d = g_ref[...].astype(jnp.float32) - h_ref[...].astype(jnp.float32)
     out_ref[0, 0] = jnp.sum(d * d)
@@ -48,27 +59,30 @@ def _delta_sqnorm_kernel(g_ref, h_ref, out_ref):
 
 def censor_delta_sqnorm(g: jax.Array, ghat: jax.Array, *,
                         block_rows: int = 256,
-                        interpret: bool = True) -> jax.Array:
+                        interpret: bool | None = None) -> jax.Array:
     """|| g - ghat ||^2 via a tiled one-sweep Pallas reduction."""
     assert g.shape == ghat.shape
+    if g.size == 0:
+        return jnp.zeros((), jnp.float32)
     g2 = _pad_to_2d(g, block_rows)
     h2 = _pad_to_2d(ghat, block_rows)
-    nr = g2.shape[0] // block_rows
+    block = block_for(g2, block_rows)
+    nr = g2.shape[0] // block
     partials = pl.pallas_call(
         _delta_sqnorm_kernel,
         grid=(nr,),
         in_specs=[
-            pl.BlockSpec((block_rows, _LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, _LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block, _LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block, _LANES), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((nr, 1), jnp.float32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(g2, h2)
     return jnp.sum(partials)
 
 
-def _select_kernel(g_ref, h_ref, t_ref, out_ref):
+def _select_kernel(t_ref, g_ref, h_ref, out_ref):
     transmit = t_ref[0, 0] != 0
     g = g_ref[...].astype(out_ref.dtype)
     h = h_ref[...]
@@ -76,25 +90,185 @@ def _select_kernel(g_ref, h_ref, t_ref, out_ref):
 
 
 def censor_select(g: jax.Array, ghat: jax.Array, transmit: jax.Array, *,
-                  block_rows: int = 256, interpret: bool = True) -> jax.Array:
+                  block_rows: int = 256,
+                  interpret: bool | None = None) -> jax.Array:
     """ghat' = transmit ? g : ghat — single fused sweep."""
     assert g.shape == ghat.shape
     orig_shape, orig_dtype = ghat.shape, ghat.dtype
+    if ghat.size == 0:
+        return ghat
     g2 = _pad_to_2d(g, block_rows)
     h2 = _pad_to_2d(ghat, block_rows)
     t = jnp.asarray(transmit, jnp.int32).reshape(1, 1)
-    nr = g2.shape[0] // block_rows
+    block = block_for(g2, block_rows)
+    nr = g2.shape[0] // block
     out = pl.pallas_call(
         _select_kernel,
         grid=(nr,),
         in_specs=[
-            pl.BlockSpec((block_rows, _LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, _LANES), lambda i: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            _smem_scalar(lambda i: (0, 0)),
+            pl.BlockSpec((block, _LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block, _LANES), lambda i: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((block_rows, _LANES), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((block, _LANES), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(h2.shape, orig_dtype),
-        interpret=interpret,
-    )(g2, h2, t)
+        interpret=resolve_interpret(interpret),
+    )(t, g2, h2)
     n = math.prod(orig_shape)
     return out.reshape(-1)[:n].reshape(orig_shape)
+
+
+# ------------------------------------------------ leading-M batched kernels
+def _delta_sqnorm_batched_kernel(g_ref, h_ref, out_ref):
+    # subtraction runs in the bank dtype (matching the reference step's
+    # ``g.astype(h.dtype) - h``), the square-sum accumulates in f32
+    d = (g_ref[...].astype(h_ref.dtype) - h_ref[...]).astype(jnp.float32)
+    out_ref[0, 0] = jnp.sum(d * d)
+
+
+def censor_delta_sqnorm_batched(g: jax.Array, ghat: jax.Array, *,
+                                block_rows: int = 256,
+                                interpret: bool | None = None) -> jax.Array:
+    """Per-worker ||g_m - ghat_m||^2 partials of one (M, ...) leaf.
+
+    One fused sweep over the stacked bank: the delta tree is never
+    materialized. Returns (M,) f32 — the leaf's contribution to the
+    eq.-(8) left-hand side.
+    """
+    assert g.shape == ghat.shape
+    m = g.shape[0]
+    if g.size == 0:
+        return jnp.zeros((m,), jnp.float32)
+    g3 = _pad_to_3d(g, block_rows)
+    h3 = _pad_to_3d(ghat, block_rows)
+    block = block_for(g3, block_rows)
+    nr = g3.shape[1] // block
+    partials = pl.pallas_call(
+        _delta_sqnorm_batched_kernel,
+        grid=(m, nr),
+        in_specs=[
+            pl.BlockSpec((1, block, _LANES), lambda w, i: (w, i, 0)),
+            pl.BlockSpec((1, block, _LANES), lambda w, i: (w, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda w, i: (w, i)),
+        out_shape=jax.ShapeDtypeStruct((m, nr), jnp.float32),
+        interpret=resolve_interpret(interpret),
+    )(g3, h3)
+    return jnp.sum(partials, axis=1)
+
+
+def _sqnorm_batched_kernel(x_ref, out_ref):
+    x = x_ref[...].astype(jnp.float32)
+    out_ref[0, 0] = jnp.sum(x * x)
+
+
+def sqnorm_batched(x: jax.Array, *, block_rows: int = 256,
+                   interpret: bool | None = None) -> jax.Array:
+    """Per-worker ||x_m||^2 of one (M, ...) leaf (f32 accumulation).
+
+    The pending-delta variant of :func:`censor_delta_sqnorm_batched`, for
+    transports that materialize the pending tree anyway (error feedback).
+    Tile partials are identical to the fused variant's, so the fed
+    runtime's row entry point (``M=1``) reproduces the batched step's
+    per-worker values bit-for-bit.
+    """
+    m = x.shape[0]
+    if x.size == 0:
+        return jnp.zeros((m,), jnp.float32)
+    x3 = _pad_to_3d(x, block_rows)
+    block = block_for(x3, block_rows)
+    nr = x3.shape[1] // block
+    partials = pl.pallas_call(
+        _sqnorm_batched_kernel,
+        grid=(m, nr),
+        in_specs=[pl.BlockSpec((1, block, _LANES), lambda w, i: (w, i, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda w, i: (w, i)),
+        out_shape=jax.ShapeDtypeStruct((m, nr), jnp.float32),
+        interpret=resolve_interpret(interpret),
+    )(x3)
+    return jnp.sum(partials, axis=1)
+
+
+def _censor_bank_advance_kernel(m_ref, g_ref, h_ref, out_ref):
+    h = h_ref[...]
+    g = g_ref[...].astype(h.dtype)
+    mask = m_ref[0, 0].astype(h.dtype)
+    out_ref[...] = h + mask * (g - h)
+
+
+def censor_bank_advance(g: jax.Array, ghat: jax.Array, mask: jax.Array, *,
+                        block_rows: int = 256,
+                        interpret: bool | None = None) -> jax.Array:
+    """Fused censor-select bank advance of one (M, ...) leaf.
+
+    ``ghat'_m = ghat_m + mask_m * (g_m - ghat_m)`` in one sweep — the
+    arithmetic form of "transmitted workers replace their bank row",
+    matching the reference step's ``h + bcast(mask) * delta`` expression
+    bit-for-bit (a ``where``-select would NOT: ``h + (g - h) != g`` in
+    floating point). ``mask`` is the censor's (M,) f32 transmit mask,
+    delivered to the kernel as a per-worker SMEM scalar.
+    """
+    assert g.shape == ghat.shape and mask.shape == (g.shape[0],)
+    if ghat.size == 0:
+        return ghat
+    shape, dtype = ghat.shape, ghat.dtype
+    m = g.shape[0]
+    g3 = _pad_to_3d(g, block_rows)
+    h3 = _pad_to_3d(ghat, block_rows)
+    mk = mask.astype(jnp.float32).reshape(m, 1)
+    block = block_for(g3, block_rows)
+    nr = g3.shape[1] // block
+    out = pl.pallas_call(
+        _censor_bank_advance_kernel,
+        grid=(m, nr),
+        in_specs=[
+            _smem_scalar(lambda w, i: (w, 0)),
+            pl.BlockSpec((1, block, _LANES), lambda w, i: (w, i, 0)),
+            pl.BlockSpec((1, block, _LANES), lambda w, i: (w, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block, _LANES), lambda w, i: (w, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(h3.shape, dtype),
+        interpret=resolve_interpret(interpret),
+    )(mk, g3, h3)
+    n = math.prod(shape[1:])
+    return out.reshape(m, -1)[:, :n].reshape(shape)
+
+
+def _bank_advance_kernel(m_ref, q_ref, h_ref, out_ref):
+    h = h_ref[...]
+    mask = m_ref[0, 0].astype(h.dtype)
+    out_ref[...] = h + mask * q_ref[...].astype(h.dtype)
+
+
+def bank_advance(ghat: jax.Array, payload: jax.Array, mask: jax.Array, *,
+                 block_rows: int = 256,
+                 interpret: bool | None = None) -> jax.Array:
+    """``ghat'_m = ghat_m + mask_m * payload_m`` in one fused sweep.
+
+    The pre-encoded-payload variant of :func:`censor_bank_advance`, used
+    when the transport materializes the payload anyway (quantization).
+    """
+    assert payload.shape == ghat.shape and mask.shape == (ghat.shape[0],)
+    if ghat.size == 0:
+        return ghat
+    shape, dtype = ghat.shape, ghat.dtype
+    m = ghat.shape[0]
+    q3 = _pad_to_3d(payload, block_rows)
+    h3 = _pad_to_3d(ghat, block_rows)
+    mk = mask.astype(jnp.float32).reshape(m, 1)
+    block = block_for(q3, block_rows)
+    nr = q3.shape[1] // block
+    out = pl.pallas_call(
+        _bank_advance_kernel,
+        grid=(m, nr),
+        in_specs=[
+            _smem_scalar(lambda w, i: (w, 0)),
+            pl.BlockSpec((1, block, _LANES), lambda w, i: (w, i, 0)),
+            pl.BlockSpec((1, block, _LANES), lambda w, i: (w, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block, _LANES), lambda w, i: (w, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(h3.shape, dtype),
+        interpret=resolve_interpret(interpret),
+    )(mk, q3, h3)
+    n = math.prod(shape[1:])
+    return out.reshape(m, -1)[:, :n].reshape(shape)

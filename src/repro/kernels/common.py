@@ -1,0 +1,81 @@
+"""Shared plumbing for the CHB Pallas kernels.
+
+Every kernel in this package sees parameter tensors through the same lens:
+the leaf is flattened and zero-padded into ``(rows, 128)`` lane-aligned
+tiles (``_pad_to_2d``), or — for leading-M stacked bank leaves — into
+``(M, rows, 128)`` with each worker slice padded independently
+(``_pad_to_3d``), so a row entry point (``repro.fed``'s per-client path)
+and the batched entry point (the composed step) produce bit-identical
+per-worker tile partials.
+
+``interpret_default`` is the single source of truth for the
+interpret-vs-Mosaic decision: every kernel module resolves
+``interpret=None`` through it, so direct kernel calls and the ``ops.py``
+jit wrappers always agree (on TPU both lower through Mosaic; anywhere else
+both run the Pallas interpreter).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+_LANES = 128
+
+
+def interpret_default() -> bool:
+    """True everywhere except a real TPU backend (Mosaic lowering)."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret) -> bool:
+    """Resolve a kernel's ``interpret=None`` default to the backend rule."""
+    return interpret_default() if interpret is None else bool(interpret)
+
+
+def tile_rows(n: int, block_rows: int) -> tuple[int, int]:
+    """(padded row count R, grid length nr) for ``n`` flat elements.
+
+    Small tensors shrink the block to the tensor's own row count instead of
+    padding up to ``block_rows`` — a d=20 paper tensor is one (1, 128)
+    tile, not a (256, 128) one. The result depends only on ``n`` and
+    ``block_rows``, so the row and batched entry points tile identically.
+    """
+    r_needed = max(1, math.ceil(n / _LANES))
+    block = min(block_rows, r_needed)
+    nr = math.ceil(r_needed / block)
+    return nr * block, nr
+
+
+def _pad_to_2d(x: jax.Array, block_rows: int) -> jax.Array:
+    """Flatten to zero-padded (R, 128); R a multiple of the block rows."""
+    flat = x.reshape(-1)
+    r, _ = tile_rows(flat.shape[0], block_rows)
+    return jnp.pad(flat, (0, r * _LANES - flat.shape[0])).reshape(r, _LANES)
+
+
+def _pad_to_3d(x: jax.Array, block_rows: int) -> jax.Array:
+    """(M, ...) leaf to zero-padded (M, R, 128), each worker slice padded
+    exactly as ``_pad_to_2d`` pads the slice alone."""
+    m = x.shape[0]
+    flat = x.reshape(m, -1)
+    r, _ = tile_rows(flat.shape[1], block_rows)
+    return jnp.pad(flat, ((0, 0), (0, r * _LANES - flat.shape[1]))
+                   ).reshape(m, r, _LANES)
+
+
+def block_for(x2d: jax.Array, block_rows: int) -> int:
+    """The per-tile row count ``_pad_to_2d``/``_pad_to_3d`` used."""
+    return min(block_rows, x2d.shape[-2])
+
+
+def compute_dtype(dtype) -> jnp.dtype:
+    """f32 accumulation for sub-f32 params, native precision otherwise.
+
+    bf16/f16 params are upcast to f32 inside the kernels (the documented
+    kernel contract, shared with the ``ref.py`` oracles); f32 and f64
+    params compute in their own dtype — which is what makes the pallas
+    backend bit-identical to the reference jnp step at those precisions.
+    """
+    return jnp.promote_types(dtype, jnp.float32)

@@ -3,9 +3,17 @@
 theta' = theta - alpha*nabla + beta*(theta - theta_prev)
 
 Unfused this is two elementwise ops (5 reads + 2 writes of parameter-sized
-arrays); the kernel does it in one sweep (3 reads + 1 write), f32 math with
-the output cast back to the parameter dtype. Tiles are (rows, 128) VMEM
-blocks.
+arrays); the kernel does it in one sweep (3 reads + 1 write). Math runs in
+``common.compute_dtype``: f32 for sub-f32 params (cast back on write, the
+shared oracle contract), native precision for f32/f64 — which keeps the
+pallas backend bit-identical to the reference jnp step at those dtypes.
+Tiles are (block_rows, 128) VMEM blocks.
+
+``alpha``/``beta`` are **traced scalar operands**, shipped to the kernel as
+a (1, 2) SMEM block — never baked into the kernel body. Every point of an
+(alpha, beta) hyperparameter grid therefore reuses one compiled program
+(the ``repro.sweep`` engine's contract; regression-tested by
+``tests/test_kernels.py::test_hb_update_no_retrace_across_alpha_grid``).
 """
 from __future__ import annotations
 
@@ -14,34 +22,51 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-from .censor import _LANES, _pad_to_2d
+from .common import (_LANES, _pad_to_2d, block_for, compute_dtype,
+                     resolve_interpret)
 
 
-def _hb_kernel(alpha, beta, t_ref, n_ref, p_ref, out_ref):
-    t = t_ref[...].astype(jnp.float32)
-    n = n_ref[...].astype(jnp.float32)
-    p = p_ref[...].astype(jnp.float32)
+def _hb_kernel(s_ref, t_ref, n_ref, p_ref, out_ref):
+    alpha = s_ref[0, 0]
+    beta = s_ref[0, 1]
+    acc = s_ref.dtype
+    t = t_ref[...].astype(acc)
+    n = n_ref[...].astype(acc)
+    p = p_ref[...].astype(acc)
     out_ref[...] = (t - alpha * n + beta * (t - p)).astype(out_ref.dtype)
 
 
 def hb_update(theta: jax.Array, nabla: jax.Array, theta_prev: jax.Array,
-              alpha: float, beta: float, *, block_rows: int = 256,
-              interpret: bool = True) -> jax.Array:
+              alpha, beta, *, block_rows: int = 256,
+              interpret: bool | None = None) -> jax.Array:
+    """One-sweep eq.-(4) update; ``alpha``/``beta`` may be traced scalars."""
     assert theta.shape == nabla.shape == theta_prev.shape
     shape, dtype = theta.shape, theta.dtype
+    if theta.size == 0:
+        return theta
+    acc = compute_dtype(dtype)
+    scalars = jnp.stack([jnp.asarray(alpha).astype(acc),
+                         jnp.asarray(beta).astype(acc)]).reshape(1, 2)
     t2 = _pad_to_2d(theta, block_rows)
     n2 = _pad_to_2d(nabla, block_rows)
     p2 = _pad_to_2d(theta_prev, block_rows)
-    nr = t2.shape[0] // block_rows
-    import functools
+    block = block_for(t2, block_rows)
+    nr = t2.shape[0] // block
     out = pl.pallas_call(
-        functools.partial(_hb_kernel, float(alpha), float(beta)),
+        _hb_kernel,
         grid=(nr,),
-        in_specs=[pl.BlockSpec((block_rows, _LANES), lambda i: (i, 0))] * 3,
-        out_specs=pl.BlockSpec((block_rows, _LANES), lambda i: (i, 0)),
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda i: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((block, _LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block, _LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block, _LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, _LANES), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(t2.shape, dtype),
-        interpret=interpret,
-    )(t2, n2, p2)
+        interpret=resolve_interpret(interpret),
+    )(scalars, t2, n2, p2)
     n = math.prod(shape)
     return out.reshape(-1)[:n].reshape(shape)

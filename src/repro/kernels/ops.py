@@ -1,43 +1,195 @@
-"""Jit-compiled wrappers around the Pallas kernels with jnp fallbacks.
+"""Pytree-aware dispatch onto the Pallas kernels + jit-compiled wrappers.
 
-On CPU (this container) kernels run in interpret mode for validation; on a
-real TPU set interpret=False (the default flips on backend detection).
+Two layers live here:
+
+  * **Tree-level dispatch** (``tree_*``) — what the ``repro.opt`` pallas
+    backend executes: leading-M-batched censor sqnorms, fused bank
+    advances, the fused int8 + error-feedback sweep, and the eq.-(4)
+    heavy-ball update, mapped over whole parameter pytrees. These are
+    pure traceable functions (no ``jit`` of their own) so they inline
+    into whatever program is being built — ``simulator.trajectory``'s
+    scan, the sweep engine's ``lax.map`` partitions, ``core/distributed``
+    strategies, or the ``repro.fed`` per-client closures.
+  * **Jit-compiled single-tensor wrappers** (``censor_delta_sqnorm``,
+    ``censor_select``, ``hb_param_update``, ``flash_attention_fwd``) —
+    convenience entry points with a jnp fallback (``use_pallas=False``).
+
+Hyperparameter contract: ``alpha``/``beta`` (and the censor's eps1, which
+never reaches a kernel) are **traced scalar operands** everywhere — they
+ride in SMEM blocks, not in the kernel closure, so sweeping a
+hyperparameter grid reuses one compiled program. ``trace_counts`` records
+how many times each dispatch function was traced (Python-side side effect:
+it only ticks at trace time, never at execution time), which is how
+``tests/test_kernels.py`` and ``benchmarks/kernel_roofline.py`` measure
+retraces.
+
+The interpret-vs-Mosaic decision lives in ``common.interpret_default`` and
+is shared with direct kernel-module calls, so both entry points agree: on
+CPU (this container) kernels run in interpret mode for validation; on a
+real TPU both lower through Mosaic.
 """
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
 
-from . import censor, flash_attention, hb_update, ref
+from . import censor, flash_attention, hb_update, quantize_ef, ref
+from .common import interpret_default
+
+_interpret_default = interpret_default      # legacy alias (pre-backend name)
 
 
-def _interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
+# ------------------------------------------------------- trace accounting
+trace_counts: dict[str, int] = {}
 
 
+def reset_trace_counts() -> None:
+    """Zero the per-dispatch trace counters."""
+    trace_counts.clear()
+
+
+def _traced(name: str) -> None:
+    trace_counts[name] = trace_counts.get(name, 0) + 1
+
+
+# ----------------------------------------------------- tree-level dispatch
+def tree_delta_sqnorms(grads, bank, *, block_rows: int = 256,
+                       interpret: bool | None = None) -> jax.Array:
+    """(M,) per-worker ||g_m - ghat_m||^2 over a whole pytree.
+
+    The eq.-(8) left-hand side, fused: one sweep per leaf over the stacked
+    bank, no materialized delta tree. The subtraction dtype and the
+    leaf-by-leaf f32 accumulation match ``core.censoring.delta_sqnorms``;
+    *within* a leaf the tiled partial sums regroup the float additions,
+    so values agree with the reference reduction to ulps, not bits (a
+    censor decision landing exactly on the eq.-(8) threshold could
+    therefore differ — see ``docs/kernels.md``).
+    """
+    _traced("tree_delta_sqnorms")
+    leaves_g = jax.tree_util.tree_leaves(grads)
+    leaves_h = jax.tree_util.tree_leaves(bank)
+    acc = jnp.zeros((leaves_h[0].shape[0],), jnp.float32)
+    for g, h in zip(leaves_g, leaves_h):
+        acc = acc + censor.censor_delta_sqnorm_batched(
+            g, h, block_rows=block_rows, interpret=interpret)
+    return acc
+
+
+def tree_sqnorms(pending, *, block_rows: int = 256,
+                 interpret: bool | None = None) -> jax.Array:
+    """(M,) per-worker ||x_m||^2 of a materialized pending-delta pytree."""
+    _traced("tree_sqnorms")
+    leaves = jax.tree_util.tree_leaves(pending)
+    acc = jnp.zeros((leaves[0].shape[0],), jnp.float32)
+    for x in leaves:
+        acc = acc + censor.sqnorm_batched(x, block_rows=block_rows,
+                                          interpret=interpret)
+    return acc
+
+
+def tree_sqnorm_row(pending_row, *, block_rows: int = 256,
+                    interpret: bool | None = None) -> jax.Array:
+    """One worker's ||x||^2 (the ``repro.fed`` per-client entry point).
+
+    Runs the batched kernel at M=1, so tile partials — and therefore the
+    censor decision — are bit-identical to the batched step's per-worker
+    slice.
+    """
+    _traced("tree_sqnorm_row")
+    leaves = jax.tree_util.tree_leaves(pending_row)
+    acc = jnp.zeros((1,), jnp.float32)
+    for x in leaves:
+        acc = acc + censor.sqnorm_batched(x[None], block_rows=block_rows,
+                                          interpret=interpret)
+    return acc[0]
+
+
+def tree_censor_bank_advance(grads, bank, mask, *, block_rows: int = 256,
+                             interpret: bool | None = None):
+    """Fused censor-select bank advance: ``ghat + mask * (g - ghat)``."""
+    _traced("tree_censor_bank_advance")
+    return jax.tree_util.tree_map(
+        lambda g, h: censor.censor_bank_advance(
+            g, h, mask, block_rows=block_rows, interpret=interpret),
+        grads, bank)
+
+
+def tree_bank_advance(bank, payload, mask, *, block_rows: int = 256,
+                      interpret: bool | None = None):
+    """Fused bank advance from an encoded payload: ``ghat + mask * q``."""
+    _traced("tree_bank_advance")
+    return jax.tree_util.tree_map(
+        lambda h, q: censor.bank_advance(
+            h, q, mask, block_rows=block_rows, interpret=interpret),
+        bank, payload)
+
+
+def tree_int8_roundtrip_ef(pending, err, mask, *, block_rows: int = 256,
+                           interpret: bool | None = None):
+    """Fused per-worker int8 round-trip + error-feedback over a pytree.
+
+    Per leaf: a one-sweep abs-max reduction derives the per-worker scales
+    (``where(amax > 0, amax/127, 1)``, exactly ``core/quantize``'s), then
+    one fused sweep emits the dequantized payload and the next
+    error-feedback leaf together. Returns ``(payload_tree, new_err_tree)``.
+    """
+    _traced("tree_int8_roundtrip_ef")
+
+    def one_leaf(p, e):
+        amax = quantize_ef.absmax_batched(p, block_rows=block_rows,
+                                          interpret=interpret)
+        scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+        return quantize_ef.quantize_ef_batched(
+            p, e, mask, scale, block_rows=block_rows, interpret=interpret)
+
+    leaves_p, treedef = jax.tree_util.tree_flatten(pending)
+    leaves_e = treedef.flatten_up_to(err)
+    outs = [one_leaf(p, e) for p, e in zip(leaves_p, leaves_e)]
+    payload = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    new_err = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    return payload, new_err
+
+
+def tree_hb_update(params, prev_params, agg, alpha, beta, *,
+                   block_rows: int = 256, interpret: bool | None = None):
+    """Fused eq.-(4) server update over a whole parameter pytree.
+
+    ``alpha``/``beta`` may be traced scalars (SMEM operands — no retrace
+    across a hyperparameter grid). Plain GD is ``beta = 0``, bit-identical
+    to the reference ``GradientDescent`` stage by construction.
+    """
+    _traced("tree_hb_update")
+    return jax.tree_util.tree_map(
+        lambda t, tp, g: hb_update.hb_update(
+            t, g, tp, alpha, beta, block_rows=block_rows,
+            interpret=interpret),
+        params, prev_params, agg)
+
+
+# ------------------------------------------- jitted single-tensor wrappers
 @functools.partial(jax.jit, static_argnames=("use_pallas",))
 def censor_delta_sqnorm(g, ghat, use_pallas: bool = True):
     if use_pallas:
-        return censor.censor_delta_sqnorm(g, ghat,
-                                          interpret=_interpret_default())
+        return censor.censor_delta_sqnorm(g, ghat)
     return ref.censor_delta_sqnorm(g, ghat)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))
 def censor_select(g, ghat, transmit, use_pallas: bool = True):
     if use_pallas:
-        return censor.censor_select(g, ghat, transmit,
-                                    interpret=_interpret_default())
+        return censor.censor_select(g, ghat, transmit)
     return ref.censor_select(g, ghat, transmit)
 
 
-@functools.partial(jax.jit, static_argnames=("alpha", "beta", "use_pallas"))
-def hb_param_update(theta, nabla, theta_prev, alpha: float, beta: float,
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def hb_param_update(theta, nabla, theta_prev, alpha, beta,
                     use_pallas: bool = True):
+    """Eq.-(4) update; ``alpha``/``beta`` are traced operands, so calling
+    this across a hyperparameter grid compiles exactly once per shape."""
     if use_pallas:
-        return hb_update.hb_update(theta, nabla, theta_prev, alpha, beta,
-                                   interpret=_interpret_default())
+        return hb_update.hb_update(theta, nabla, theta_prev, alpha, beta)
     return ref.hb_update(theta, nabla, theta_prev, alpha, beta)
 
 
@@ -50,5 +202,5 @@ def flash_attention_fwd(q, k, v, causal: bool = True, window=None,
     if use_pallas:
         return flash_attention.flash_attention_pallas(
             q, k, v, causal=causal, window=window, q_block=q_block,
-            kv_block=kv_block, interpret=_interpret_default())
+            kv_block=kv_block, interpret=interpret_default())
     return ref.flash_attention_fwd(q, k, v, causal=causal, window=window)

@@ -4,6 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .common import compute_dtype
+
 
 def censor_delta_sqnorm(g: jax.Array, ghat: jax.Array) -> jax.Array:
     """|| g - ghat ||^2 in f32 (per-tensor partial of the eq.-(8) test)."""
@@ -18,12 +20,70 @@ def censor_select(g: jax.Array, ghat: jax.Array,
 
 
 def hb_update(theta: jax.Array, nabla: jax.Array, theta_prev: jax.Array,
-              alpha: float, beta: float) -> jax.Array:
-    """Eq. (4): theta - alpha*nabla + beta*(theta - theta_prev), f32 math."""
-    t = theta.astype(jnp.float32)
-    out = t - alpha * nabla.astype(jnp.float32) \
-        + beta * (t - theta_prev.astype(jnp.float32))
+              alpha, beta) -> jax.Array:
+    """Eq. (4): theta - alpha*nabla + beta*(theta - theta_prev).
+
+    Math in ``common.compute_dtype`` (f32 for sub-f32 params, native
+    precision for f32/f64), result cast back to the parameter dtype —
+    the exact contract of the fused kernel. ``alpha``/``beta`` may be
+    traced scalars.
+    """
+    acc = compute_dtype(theta.dtype)
+    a = jnp.asarray(alpha).astype(acc)
+    b = jnp.asarray(beta).astype(acc)
+    t = theta.astype(acc)
+    out = t - a * nabla.astype(acc) + b * (t - theta_prev.astype(acc))
     return out.astype(theta.dtype)
+
+
+# ------------------------------------------------ leading-M batched oracles
+def censor_delta_sqnorm_batched(g: jax.Array, ghat: jax.Array) -> jax.Array:
+    """(M,) per-worker ||g_m - ghat_m||^2; subtraction in the bank dtype,
+    f32 accumulation (the reference step's exact recipe)."""
+    m = g.shape[0]
+    d = (g.astype(ghat.dtype) - ghat).astype(jnp.float32)
+    return jnp.sum(jnp.square(d).reshape(m, -1), axis=1)
+
+
+def sqnorm_batched(x: jax.Array) -> jax.Array:
+    """(M,) per-worker ||x_m||^2 with f32 accumulation."""
+    m = x.shape[0]
+    return jnp.sum(jnp.square(x.astype(jnp.float32)).reshape(m, -1), axis=1)
+
+
+def _bcast(mask: jax.Array, leaf: jax.Array) -> jax.Array:
+    return mask.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
+
+
+def censor_bank_advance(g: jax.Array, ghat: jax.Array,
+                        mask: jax.Array) -> jax.Array:
+    """ghat + mask * (g - ghat), the arithmetic-mask bank advance."""
+    return ghat + _bcast(mask, ghat) * (g.astype(ghat.dtype) - ghat)
+
+
+def bank_advance(ghat: jax.Array, payload: jax.Array,
+                 mask: jax.Array) -> jax.Array:
+    """ghat + mask * payload (pre-encoded payload variant)."""
+    return ghat + _bcast(mask, ghat) * payload.astype(ghat.dtype)
+
+
+def absmax_batched(x: jax.Array) -> jax.Array:
+    """(M,) per-worker max |x_m| in ``x.dtype``."""
+    m = x.shape[0]
+    return jnp.max(jnp.abs(x).reshape(m, -1), axis=1)
+
+
+def quantize_ef_batched(pending: jax.Array, err: jax.Array,
+                        mask: jax.Array, scale: jax.Array
+                        ) -> tuple[jax.Array, jax.Array]:
+    """(payload, new_err) of the fused int8 + error-feedback sweep."""
+    s = _bcast(scale.astype(jnp.float32), pending).astype(jnp.float32)
+    q32 = jnp.clip(jnp.round(pending.astype(jnp.float32) / s), -127, 127)
+    payload = (q32 * s).astype(pending.dtype)
+    mk = _bcast(mask, pending)
+    new_err = mk * (pending - payload) \
+        + (1.0 - mk) * err.astype(pending.dtype)
+    return payload, new_err
 
 
 def flash_attention_fwd(q, k, v, *, causal: bool = True,

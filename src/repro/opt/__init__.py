@@ -24,7 +24,7 @@ from .api import FedOptimizer, OptState, StepStats, static_pos
 from .censor import (AdaptiveCensor, CensorPolicy, Eq8Censor, NeverCensor,
                      StochasticCensor)
 from .compat import as_optimizer, from_config
-from .optimizer import ComposedOptimizer
+from .optimizer import BACKENDS, ComposedOptimizer
 from .registry import (CENSOR_KINDS, SERVER_KINDS, TRANSPORT_KINDS,
                        from_spec, make, make_for_point, names, register,
                        to_spec)
@@ -37,7 +37,7 @@ __all__ = [
     "StochasticCensor",
     "Transport", "DenseTransport", "Int8Transport",
     "ServerUpdate", "GradientDescent", "HeavyBall",
-    "ComposedOptimizer",
+    "ComposedOptimizer", "BACKENDS",
     "register", "make", "make_for_point", "names", "to_spec", "from_spec",
     "CENSOR_KINDS", "TRANSPORT_KINDS", "SERVER_KINDS",
     "from_config", "as_optimizer",

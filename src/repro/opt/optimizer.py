@@ -19,10 +19,14 @@ from ..core import accounting
 from ..core.accounting import CommStats
 from ..core.censoring import delta_sqnorms, step_sqnorm
 from ..core.util import tree_sqnorm, tree_stack_zeros, tree_sum_leading
+from ..kernels import censor as kernel_censor
+from ..kernels import ops as kernel_ops
 from .api import OptState, StepStats, static_pos
 from .censor import CensorPolicy, Eq8Censor, NeverCensor
-from .server import HeavyBall, ServerUpdate
-from .transport import Transport, _bcast
+from .server import GradientDescent, HeavyBall, ServerUpdate
+from .transport import (DenseTransport, Int8Transport, Transport, _bcast)
+
+BACKENDS = ("reference", "pallas")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,10 +34,10 @@ class ComposedOptimizer:
     """One censor policy + one transport + one server update.
 
     Structural fields (``num_workers``, ``granularity``, ``bank_dtype``,
-    and each stage's *class*) decide the compiled program and must be
-    static; the stages' scalar hyperparameters (alpha, beta, eps1, tau0)
-    may be traced — which is how ``repro.sweep`` runs a whole grid of
-    compositions through one compiled program.
+    ``backend``, and each stage's *class*) decide the compiled program and
+    must be static; the stages' scalar hyperparameters (alpha, beta, eps1,
+    tau0) may be traced — which is how ``repro.sweep`` runs a whole grid
+    of compositions through one compiled program.
 
     Attributes:
       censor: who uploads (``opt.censor``).
@@ -46,6 +50,21 @@ class ComposedOptimizer:
         static eps1 and a dense transport).
       bank_dtype: optional dtype for the stale-gradient bank (bf16 halves
         state memory at scale).
+      backend: ``"reference"`` (pure-jnp stage calls) or ``"pallas"``
+        (the fused ``repro.kernels`` execution engine: one-sweep censor
+        sqnorms over the stacked bank, fused bank advance, fused int8 +
+        error feedback, fused eq.-(4) update). Numerics contract, for
+        f32/f64 params: every fused stage runs the reference's exact
+        expressions in the reference's dtypes, so steps agree up to XLA
+        fusion/reduction-order ulps — and are **bit-identical on the
+        pinned golden tasks** (tests/test_backend.py); see
+        ``docs/kernels.md`` for the precise statement and its limits on
+        large tensors. Sub-f32 params (bf16/f16) instead upcast to f32
+        inside the kernels — better accumulation than the reference's
+        native-bf16 arithmetic, matching the ``ref.py`` oracles but NOT
+        the reference backend. Requires the built-in dense/int8
+        transports and gd/hb servers — custom stages have no fused path
+        and must run on the reference backend.
     """
 
     censor: CensorPolicy
@@ -54,6 +73,28 @@ class ComposedOptimizer:
     num_workers: int
     granularity: str = "global"
     bank_dtype: Any = None
+    backend: str = "reference"
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; valid: {BACKENDS}")
+        if self.backend == "pallas":
+            # the fused kernels implement the built-in stages only; a
+            # custom stage silently falling back would misreport what ran
+            if not isinstance(self.transport,
+                              (DenseTransport, Int8Transport)):
+                raise TypeError(
+                    "backend='pallas' fuses the built-in transports "
+                    "(dense | int8); custom transport "
+                    f"{type(self.transport).__name__} must run on the "
+                    "reference backend")
+            if not isinstance(self.server, (GradientDescent, HeavyBall)):
+                raise TypeError(
+                    "backend='pallas' fuses the built-in servers "
+                    "(gd | hb); custom server "
+                    f"{type(self.server).__name__} must run on the "
+                    "reference backend")
 
     # ------------------------------------------------ hyperparameter views
     # Flat views of the stages' scalars, matching the legacy FedOptConfig
@@ -146,11 +187,6 @@ class ComposedOptimizer:
     def step(self, state: OptState, params, worker_grads
              ) -> tuple[OptState, Any, StepStats]:
         """One iteration of Algorithm 1 (see ``api.FedOptimizer.step``)."""
-        # delta_m = g_m - ghat_m (in the bank's dtype for exact sync)
-        delta = jax.tree_util.tree_map(
-            lambda g, h: g.astype(h.dtype) - h, worker_grads, state.ghat)
-        pending = self.transport.prepare(delta, state.err)
-
         # per_tensor granularity binds to the eq.-(8) censor only; any other
         # policy (never / adaptive / stochastic) degenerates to the global
         # path, mirroring the legacy eps1==0 behavior.
@@ -162,8 +198,19 @@ class ComposedOptimizer:
                     "per_tensor censoring needs a static eps1 (its byte "
                     "accounting divmods the payload host-side)")
             if eps_pos:
+                delta = jax.tree_util.tree_map(
+                    lambda g, h: g.astype(h.dtype) - h,
+                    worker_grads, state.ghat)
+                pending = self.transport.prepare(delta, state.err)
                 return self._step_per_tensor(state, params, pending)
 
+        if self.backend == "pallas":
+            return self._step_pallas(state, params, worker_grads)
+
+        # delta_m = g_m - ghat_m (in the bank's dtype for exact sync)
+        delta = jax.tree_util.tree_map(
+            lambda g, h: g.astype(h.dtype) - h, worker_grads, state.ghat)
+        pending = self.transport.prepare(delta, state.err)
         dsq = delta_sqnorms(pending)
         ssq = step_sqnorm(params, state.prev_params)
         mask, new_censor = self.censor.decide(state.censor, dsq, ssq)
@@ -192,6 +239,88 @@ class ComposedOptimizer:
         )
         return new_state, new_params, stats
 
+    def _step_pallas(self, state: OptState, params, worker_grads
+                     ) -> tuple[OptState, Any, StepStats]:
+        """The fused-kernel execution of the global-granularity step.
+
+        Stage semantics are identical to the reference path — same censor
+        ``decide``, same accounting, same state layout — but every
+        parameter-sized sweep runs through ``repro.kernels``:
+
+          * eq.-(8) left-hand side: one fused sweep per leaf over the
+            stacked bank (dense transports never materialize the delta
+            tree at all);
+          * bank advance: one fused ``ghat + mask * delta`` sweep;
+          * int8 transport: a per-worker abs-max reduction plus ONE fused
+            sweep emitting payload and error-feedback bank together;
+          * eq. (4): the one-sweep heavy-ball kernel with traced
+            alpha/beta SMEM operands.
+
+        Numerics at f32/f64: per-element expressions and dtypes match
+        the reference path exactly; what may differ is XLA's fusion of
+        the jnp side (FMA contraction on large tensors) and the tiled
+        partial-sum order of the sqnorm reductions — both ulp-level per
+        step. Golden-pinned bit-identical on the paper-scale tasks
+        (tests/test_backend.py); on much larger tensors trajectories can
+        drift by compounded ulps while censor masks and uplink counts
+        stay aligned (see docs/kernels.md). Sub-f32 params compute in
+        f32 in-kernel and therefore genuinely diverge from the
+        reference's native-bf16 arithmetic (they match the ``ref.py``
+        oracles instead).
+        """
+        quantized = self.transport.stateful
+        if quantized:
+            delta = jax.tree_util.tree_map(
+                lambda g, h: g.astype(h.dtype) - h,
+                worker_grads, state.ghat)
+            pending = self.transport.prepare(delta, state.err)
+            dsq = kernel_ops.tree_sqnorms(pending)
+        else:
+            pending = None
+            dsq = kernel_ops.tree_delta_sqnorms(worker_grads, state.ghat)
+        ssq = step_sqnorm(params, state.prev_params)
+        mask, new_censor = self.censor.decide(state.censor, dsq, ssq)
+
+        if quantized:
+            payload, new_err = kernel_ops.tree_int8_roundtrip_ef(
+                pending, state.err, mask)
+            new_ghat = kernel_ops.tree_bank_advance(state.ghat, payload,
+                                                    mask)
+        else:
+            new_err = state.err
+            new_ghat = kernel_ops.tree_censor_bank_advance(
+                worker_grads, state.ghat, mask)
+        per_tx_bytes = self.transport.payload_bytes(params)
+
+        agg = tree_sum_leading(new_ghat)
+        new_params = self.apply_server(params, state.prev_params, agg)
+
+        stats = StepStats(mask=mask, delta_sq=dsq, step_sq=ssq,
+                          agg_grad_sqnorm=tree_sqnorm(agg))
+        new_state = OptState(
+            prev_params=params,
+            ghat=new_ghat,
+            err=new_err,
+            comm=state.comm.update(mask, per_tx_bytes),
+            censor=new_censor,
+        )
+        return new_state, new_params, stats
+
+    def apply_server(self, params, prev_params, agg):
+        """The backend-dispatched server update (``repro.fed`` hook).
+
+        The event runtime calls this instead of ``server.apply`` so a
+        pallas composition advances theta through the fused eq.-(4)
+        kernel there too. ``GradientDescent`` runs the kernel at beta=0,
+        which is bit-identical to its reference delegation by
+        construction.
+        """
+        if self.backend == "pallas":
+            return kernel_ops.tree_hb_update(
+                params, prev_params, agg, self.server.alpha,
+                getattr(self.server, "beta", 0.0))
+        return self.server.apply(params, prev_params, agg)
+
     def _step_per_tensor(self, state: OptState, params, pending):
         """Per-tensor censoring (beyond paper; see class docstring).
 
@@ -214,10 +343,15 @@ class ComposedOptimizer:
         mib_up = jnp.zeros((), jnp.int32)
         rem_up = jnp.zeros((), jnp.int32)
         any_mask = jnp.zeros((m,), jnp.float32)
+        pallas = self.backend == "pallas"
         for d, t, tp, h in zip(leaves_delta, leaves_theta, leaves_prev,
                                leaves_ghat):
-            dsq_t = jnp.sum(jnp.square(d.astype(jnp.float32)).reshape(m, -1),
-                            axis=1)                              # (M,)
+            if pallas:          # fused per-leaf eq.-(8) partials
+                dsq_t = kernel_censor.sqnorm_batched(d)          # (M,)
+            else:
+                dsq_t = jnp.sum(
+                    jnp.square(d.astype(jnp.float32)).reshape(m, -1),
+                    axis=1)                                      # (M,)
             ssq_t = jnp.sum(jnp.square(t.astype(jnp.float32)
                                        - tp.astype(jnp.float32)))
             mask_t = (dsq_t > eps1 * ssq_t).astype(jnp.float32)
@@ -230,11 +364,14 @@ class ComposedOptimizer:
                 d[0].size * d.dtype.itemsize)
             mib_up, rem_up = accounting.carry_bytes(
                 mib_up + n_tx_t * pb_mib, rem_up + n_tx_t * pb_rem)
-            new_ghat.append(h + _bcast(mask_t, h) * d.astype(h.dtype))
+            if pallas:          # fused bank advance, one sweep per leaf
+                new_ghat.append(kernel_censor.bank_advance(h, d, mask_t))
+            else:
+                new_ghat.append(h + _bcast(mask_t, h) * d.astype(h.dtype))
         new_ghat = jax.tree_util.tree_unflatten(treedef, new_ghat)
 
         agg = tree_sum_leading(new_ghat)
-        new_params = self.server.apply(params, state.prev_params, agg)
+        new_params = self.apply_server(params, state.prev_params, agg)
         comm = CommStats(
             uplink_count=state.comm.uplink_count + any_mask.astype(jnp.int32),
             uplink_mib=state.comm.uplink_mib,

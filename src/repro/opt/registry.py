@@ -119,53 +119,55 @@ def _transport(quantize: Optional[str]):
 # ------------------------------------------------------ built-in algorithms
 @register("gd")
 def _gd(alpha, num_workers, *, quantize=None, granularity="global",
-        bank_dtype=None) -> ComposedOptimizer:
+        bank_dtype=None, backend="reference") -> ComposedOptimizer:
     """Classical distributed gradient descent (every worker transmits)."""
     return ComposedOptimizer(
         censor=NeverCensor(), transport=_transport(quantize),
         server=GradientDescent(alpha), num_workers=num_workers,
-        granularity=granularity, bank_dtype=bank_dtype)
+        granularity=granularity, bank_dtype=bank_dtype, backend=backend)
 
 
 @register("hb")
 def _hb(alpha, num_workers, *, beta=0.4, quantize=None,
-        granularity="global", bank_dtype=None) -> ComposedOptimizer:
+        granularity="global", bank_dtype=None,
+        backend="reference") -> ComposedOptimizer:
     """Classical heavy ball (eq. 2); paper default beta=0.4."""
     return ComposedOptimizer(
         censor=NeverCensor(), transport=_transport(quantize),
         server=HeavyBall(alpha, beta), num_workers=num_workers,
-        granularity=granularity, bank_dtype=bank_dtype)
+        granularity=granularity, bank_dtype=bank_dtype, backend=backend)
 
 
 @register("lag")
 def _lag(alpha, num_workers, *, eps1=None, eps1_scale=0.1, quantize=None,
-         granularity="global", bank_dtype=None) -> ComposedOptimizer:
+         granularity="global", bank_dtype=None,
+         backend="reference") -> ComposedOptimizer:
     """Censoring-based GD (LAG-WK, ref. [54]) with the shared eq. (8)."""
     if eps1 is None:
         eps1 = paper_eps1(alpha, num_workers, eps1_scale)
     return ComposedOptimizer(
         censor=Eq8Censor(eps1), transport=_transport(quantize),
         server=GradientDescent(alpha), num_workers=num_workers,
-        granularity=granularity, bank_dtype=bank_dtype)
+        granularity=granularity, bank_dtype=bank_dtype, backend=backend)
 
 
 @register("chb")
 def _chb(alpha, num_workers, *, beta=0.4, eps1=None, eps1_scale=0.1,
-         quantize=None, granularity="global",
-         bank_dtype=None) -> ComposedOptimizer:
+         quantize=None, granularity="global", bank_dtype=None,
+         backend="reference") -> ComposedOptimizer:
     """The paper's algorithm with its Sec.-IV default constants."""
     if eps1 is None:
         eps1 = paper_eps1(alpha, num_workers, eps1_scale)
     return ComposedOptimizer(
         censor=Eq8Censor(eps1), transport=_transport(quantize),
         server=HeavyBall(alpha, beta), num_workers=num_workers,
-        granularity=granularity, bank_dtype=bank_dtype)
+        granularity=granularity, bank_dtype=bank_dtype, backend=backend)
 
 
 @register("csgd")
 def _csgd(alpha, num_workers, *, tau0=None, decay=0.99, eps1=None, seed=0,
-          quantize=None, granularity="global",
-          bank_dtype=None) -> ComposedOptimizer:
+          quantize=None, granularity="global", bank_dtype=None,
+          backend="reference") -> ComposedOptimizer:
     """CSGD-style stochastically censored GD (Li et al., arXiv:1909.03631).
 
     Registered purely through composition — the payoff of the stage API:
@@ -180,7 +182,7 @@ def _csgd(alpha, num_workers, *, tau0=None, decay=0.99, eps1=None, seed=0,
         censor=StochasticCensor(tau0=tau0, decay=decay, seed=seed),
         transport=_transport(quantize), server=GradientDescent(alpha),
         num_workers=num_workers, granularity=granularity,
-        bank_dtype=bank_dtype)
+        bank_dtype=bank_dtype, backend=backend)
 
 
 # --------------------------------------------------------- spec round-trip
@@ -221,6 +223,7 @@ def to_spec(o: ComposedOptimizer) -> dict:
     return {
         "num_workers": o.num_workers,
         "granularity": o.granularity,
+        "backend": o.backend,
         "bank_dtype": (None if o.bank_dtype is None
                        else jnp.dtype(o.bank_dtype).name),
         "censor": _stage_spec(o.censor, CENSOR_KINDS, "censor"),
@@ -244,4 +247,5 @@ def from_spec(spec: dict) -> ComposedOptimizer:
         num_workers=int(spec["num_workers"]),
         granularity=spec.get("granularity", "global"),
         bank_dtype=None if bank_dtype is None else jnp.dtype(bank_dtype),
+        backend=spec.get("backend", "reference"),
     )

@@ -34,7 +34,7 @@ def test_markdown_files_exist():
     names = {p.relative_to(REPO).as_posix() for p in files}
     for required in ("README.md", "docs/architecture.md",
                      "docs/paper_map.md", "docs/sweep_guide.md",
-                     "docs/opt_api.md"):
+                     "docs/opt_api.md", "docs/kernels.md"):
         assert required in names, f"missing {required}"
 
 
@@ -82,6 +82,24 @@ def test_opt_api_code_executes():
         opt_registry._ALGORITHMS.update(algos_before)
         opt.CENSOR_KINDS.clear()
         opt.CENSOR_KINDS.update(censors_before)
+
+
+def test_kernels_doc_code_executes():
+    """Doc-sync: run every ```python block of docs/kernels.md, in order,
+    in one shared namespace — the backend-selection, bit-exactness,
+    no-retrace, and interpret-rule claims are asserted inside the doc."""
+    guide = (REPO / "docs" / "kernels.md").read_text()
+    blocks = _CODE_BLOCK_RE.findall(guide)
+    assert len(blocks) >= 5, "kernel guide structure changed: update this"
+    ns = {"__name__": "kernels_doc"}
+    for i, block in enumerate(blocks):
+        try:
+            exec(compile(block, f"kernels.md[block {i}]", "exec"), ns)
+        except Exception as e:     # pragma: no cover - failure reporting
+            pytest.fail(f"kernels.md code block {i} failed: {e!r}")
+    # the doc's headline objects came out right
+    assert ns["spec"]["backend"] == "pallas"
+    assert ns["res"].num_programs == 1
 
 
 def test_sweep_guide_code_executes():
