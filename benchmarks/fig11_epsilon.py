@@ -95,6 +95,8 @@ def main() -> tuple[str, dict]:
         "tol": TOL,
         "fstar": fstar,
         "frontier": rows,
+        "backend": "reference",
+        "specs": list(res.specs),
     }
     return f"fig11_epsilon,0,{derived}", payload
 

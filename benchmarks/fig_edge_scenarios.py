@@ -64,7 +64,7 @@ def scenarios(m: int) -> dict:
     }
 
 
-def main(rounds: int = 600) -> str:
+def main(rounds: int = 600) -> tuple[str, dict]:
     m = 9
     bundle = paper_tasks.make_linear_regression(m=m)
     fstar = float(simulator.estimate_fstar(bundle.task, bundle.alpha_paper,
@@ -76,11 +76,14 @@ def main(rounds: int = 600) -> str:
           f"f-f* < {tol:g} ==")
     chb_wins = 0
     rows = []
+    specs: dict[str, dict] = {}
+    results: dict[str, dict] = {}
     for sname, sc in scenarios(m).items():
         print("\n" + hdr)
         per_algo = {}
         for algo in ALGOS:
             cfg = opt.make(algo, bundle.alpha_paper * sc["alpha_scale"], m)
+            specs[f"{sname}/{algo}"] = opt.to_spec(cfg)
             hist = fed.run_edge(cfg, bundle.task, sc["edge"](seed=17),
                                 rounds)
             met = fed.edge_metrics_to_accuracy(hist, fstar, tol)
@@ -90,6 +93,7 @@ def main(rounds: int = 600) -> str:
                   f"{met['uplinks']:8d} {mb:8.2f} "
                   f"{met['energy_j']:9.2f} {met['wall_clock_s']:8.2f}")
             rows.append((sname, algo, met))
+        results[sname] = per_algo
         # headline: CHB reaches target with fewer uplinks than HB
         if 0 <= per_algo["chb"]["uplinks"] < per_algo["hb"]["uplinks"] or \
                 per_algo["hb"]["uplinks"] < 0 <= per_algo["chb"]["uplinks"]:
@@ -98,12 +102,15 @@ def main(rounds: int = 600) -> str:
     print(f"\nCHB fewer-uplinks-than-HB in {chb_wins}/{n_scen} scenarios")
     reached = sum(1 for _, a, met in rows
                   if a == "chb" and met["rounds"] >= 0)
-    return (f"fig_edge_scenarios,0,chb_wins={chb_wins}/{n_scen};"
-            f"chb_reached={reached}/{n_scen}")
+    row = (f"fig_edge_scenarios,0,chb_wins={chb_wins}/{n_scen};"
+           f"chb_reached={reached}/{n_scen}")
+    payload = {"backend": "reference", "specs": specs, "tol": tol,
+               "fstar": fstar, "rounds": rounds, "scenarios": results}
+    return row, payload
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=600)
     args = ap.parse_args()
-    print(main(rounds=args.rounds))
+    print(main(rounds=args.rounds)[0])

@@ -28,6 +28,7 @@ the pallas numbers run through the interpreter (``interpret=True``) and
 are *validation* numbers, not performance numbers — the analytic sweep
 table is the hardware story, the measured table is the no-retrace story.
 """
+import os
 import time
 
 import jax
@@ -39,11 +40,16 @@ import numpy as np
 from repro import opt, sweep
 from repro.data import paper_tasks
 from repro.kernels import ops as kernel_ops
+from repro.obs import hlo_report
+
+# REPRO_BENCH_FAST=1: CI-smoke shapes — same code paths, tiny grid/problem
+FAST = os.environ.get("REPRO_BENCH_FAST", "") not in ("", "0")
 
 M = 5
-NUM_ITERS = 300
-ALPHAS = (0.25, 0.5, 1.0)           # x alpha_paper
-EPS_SCALES = (0.05, 0.1, 0.2)
+NUM_ITERS = 40 if FAST else 300
+ALPHAS = (0.5, 1.0) if FAST else (0.25, 0.5, 1.0)   # x alpha_paper
+EPS_SCALES = (0.1,) if FAST else (0.05, 0.1, 0.2)
+TASK_SHAPE = dict(m=M, n_per=10, d=8) if FAST else dict(m=M, n_per=30, d=20)
 
 
 def analytic_sweeps(quantize: bool) -> dict[str, float]:
@@ -81,8 +87,34 @@ def measured_traces(backend: str, task, alpha_paper) -> dict:
             "elapsed_s": dt, "final_objective": final}
 
 
+def step_bytes(backend: str, task, alpha_paper) -> dict:
+    """Measured vs analytic HBM bytes for ONE dense composed step.
+
+    Measured = XLA's own ``cost_analysis`` "bytes accessed" for the
+    compiled step (``obs.hlo_report.cost_summary``); analytic = the sweep
+    model above times the bank row size. The two count different things —
+    XLA sees every buffer the program touches (task data included), the
+    model only parameter-sized stage traffic — so the ratio is reported,
+    not asserted; what *is* meaningful is tracking either number across
+    commits (``tools/bench_diff.py``).
+    """
+    o = opt.make("chb", alpha_paper, M, backend=backend)
+    state = o.init(task.init_params)
+    grads = jax.vmap(task.grad_fn, in_axes=(None, 0))(
+        task.init_params, task.worker_data)
+    cost = hlo_report.cost_summary(
+        lambda s, p, g: o.step(s, p, g), state, task.init_params, grads)
+    row_bytes = sum(np.asarray(x).nbytes for x in
+                    jax.tree_util.tree_leaves(state.ghat)) / M
+    analytic = analytic_sweeps(False)[backend] * row_bytes * M
+    return {"measured_bytes_accessed": cost["bytes_accessed"],
+            "analytic_bytes": analytic,
+            "measured_flops": cost["flops"],
+            "bank_row_bytes": row_bytes}
+
+
 def main() -> tuple[str, dict]:
-    b = paper_tasks.make_linear_regression(m=M, n_per=30, d=20, seed=0)
+    b = paper_tasks.make_linear_regression(seed=0, **TASK_SHAPE)
     task = b.task
 
     analytic = {"dense": analytic_sweeps(False),
@@ -91,6 +123,16 @@ def main() -> tuple[str, dict]:
     for mode, row in analytic.items():
         print(f"  {mode:6s} reference={row['reference']:.2f} "
               f"pallas={row['pallas']:.2f} ratio={row['ratio']:.2f}x")
+
+    bytes_moved = {be: step_bytes(be, task, b.alpha_paper)
+                   for be in opt.BACKENDS}
+    print("dense-step HBM bytes (measured = XLA cost_analysis):")
+    for be, rowb in bytes_moved.items():
+        ratio = rowb["measured_bytes_accessed"] / max(
+            1.0, rowb["analytic_bytes"])
+        print(f"  {be:9s} measured={rowb['measured_bytes_accessed']:.3g}B "
+              f"analytic={rowb['analytic_bytes']:.3g}B "
+              f"(x{ratio:.2f} of model)")
 
     measured = {be: measured_traces(be, task, b.alpha_paper)
                 for be in opt.BACKENDS}
@@ -116,6 +158,15 @@ def main() -> tuple[str, dict]:
            f";int8_sweep_ratio={analytic['int8']['ratio']:.2f}x"
            f";retraces=0")
     payload = {"analytic_sweeps": analytic, "measured": measured,
+               "backend": list(opt.BACKENDS),
+               "fast": FAST,
+               "measured_bytes": {
+                   be: rowb["measured_bytes_accessed"]
+                   for be, rowb in bytes_moved.items()},
+               "analytic_bytes": {
+                   be: rowb["analytic_bytes"]
+                   for be, rowb in bytes_moved.items()},
+               "bytes_detail": bytes_moved,
                "specs": {be: opt.to_spec(
                    opt.make("chb", b.alpha_paper, M, backend=be))
                    for be in opt.BACKENDS}}

@@ -74,16 +74,18 @@ def roofline_table(result_dir: str, chips: int = 256) -> list[dict]:
     return rows
 
 
-def main() -> str:
+def main() -> tuple[str, dict]:
     base = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "results")
     n_ok = 0
     total = 0
+    all_rows = {}
     for mesh in ("pod1", "pod2"):
         d = os.path.join(base, f"dryrun_{mesh}")
         if not os.path.isdir(d):
             continue
         rows = roofline_table(d)
+        all_rows[mesh] = rows
         print(f"\n== Roofline ({mesh}) ==")
         print(f"{'arch':24s} {'shape':12s} {'comp_s':>9s} {'mem_s':>9s} "
               f"{'coll_s':>9s} {'bound':>10s} {'useful':>7s}")
@@ -99,7 +101,11 @@ def main() -> str:
                   f"{r['collective_s']:9.4f} {r['bottleneck']:>10s} "
                   f"{r['useful_ratio']:7.3f}")
     hillclimb_table(base)
-    return f"roofline,0,cases_ok={n_ok}/{total}"
+    payload = {"backend": "reference", "specs": [],
+               "peaks": {"flops": PEAK_FLOPS, "hbm_bw": HBM_BW,
+                         "link_bw": LINK_BW},
+               "tables": all_rows}
+    return f"roofline,0,cases_ok={n_ok}/{total}", payload
 
 
 def hillclimb_table(base: str) -> None:
@@ -137,4 +143,4 @@ def hillclimb_table(base: str) -> None:
 
 
 if __name__ == "__main__":
-    print(main())
+    print(main()[0])

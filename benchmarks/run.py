@@ -3,19 +3,29 @@
   PYTHONPATH=src python -m benchmarks.run [--only NAME] [--json PATH]
 
 Prints a ``name,us_per_call,derived`` CSV line per benchmark at the end.
-``--json PATH`` additionally writes a machine-readable artifact (rows plus
-whatever structured payload each benchmark returns — trajectories,
-frontiers, speedups, and the full ``repro.opt`` registry spec of every
-algorithm, so a result is reproducible from the artifact alone via
-``opt.from_spec``) so future PRs can commit ``BENCH_*.json`` files.
+``--json PATH`` additionally writes a schema-versioned artifact (see
+``repro.obs.bench`` for the envelope: ``schema_version``, ``env``,
+``registry``, per-benchmark payloads with rows, per-point ``repro.opt``
+registry specs, and backend axes) — the checked-in ``BENCH_*.json`` files
+at the repo root are these artifacts, validated by
+``python -m repro.obs.bench --validate`` and diffed by
+``tools/bench_diff.py``.
+
+Every per-benchmark payload uniformly carries ``backend`` (the
+``repro.opt`` backend axis it exercised, defaulting to "reference") and
+``specs`` (per-point registry specs where the benchmark has optimizer
+points), so a result row is reproducible from the artifact alone via
+``opt.from_spec``.
 
 Benchmark modules are imported lazily (module name == benchmark name), so
 ``--only`` validation costs nothing and a typo'd name fails fast with the
-list of valid names instead of silently printing an empty CSV.
+list of valid names instead of silently printing an empty CSV. Setting
+``REPRO_BENCH_FAST=1`` asks benchmarks that support it (kernel_roofline)
+to run tiny CI-smoke shapes.
 """
 import argparse
 import importlib
-import json
+import os
 import sys
 import time
 import traceback
@@ -71,7 +81,13 @@ def main() -> None:
                 row, payload = out, {}
             dt = time.time() - t0
             rows.append(row)
-            payloads[name] = {"row": row, "seconds": dt, **payload}
+            entry = {"row": row, "seconds": dt, **payload}
+            # uniform artifact contract: every payload names its backend
+            # axis and carries per-point specs (empty when the benchmark
+            # has no optimizer points)
+            entry.setdefault("backend", "reference")
+            entry.setdefault("specs", [])
+            payloads[name] = entry
             print(f"[{name}] done in {dt:.1f}s")
         except Exception:
             failed.append(name)
@@ -81,10 +97,15 @@ def main() -> None:
         print(r)
     if args.json:
         from repro import opt
-        doc = {"benchmarks": payloads, "failed": failed,
-               "registry": list(opt.names())}
-        with open(args.json, "w") as f:
-            json.dump(doc, f, indent=1, sort_keys=True)
+        from repro.obs import bench
+        stem = os.path.basename(args.json)
+        if stem.startswith("BENCH_"):
+            stem = stem[len("BENCH_"):]
+        stem = stem[:-5] if stem.endswith(".json") else stem
+        doc = bench.make_artifact(
+            stem or "bench", payloads, failed=failed,
+            registry=list(opt.names()))
+        bench.write_artifact(doc, args.json)
         print(f"wrote {args.json}", file=sys.stderr)
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)

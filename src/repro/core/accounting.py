@@ -108,6 +108,19 @@ class CommStats(NamedTuple):
     def total_uplinks(self) -> jax.Array:
         return jnp.sum(self.uplink_count)
 
+    def metrics(self) -> dict:
+        """The counters as a flat ``repro.obs`` MetricBag fragment.
+
+        Read-only derived scalars (jit-safe): exact cumulative uplink
+        bytes via the split counters' float view, plus the raw counts.
+        """
+        return {
+            "comm/uplink_total": self.total_uplinks,
+            "comm/uplink_bytes": self.uplink_bytes,
+            "comm/downlink_count": self.downlink_count,
+            "comm/iterations": self.iterations,
+        }
+
     def savings_vs_dense(self) -> jax.Array:
         """Fraction of uplinks censored vs. transmit-every-iteration."""
         m = self.uplink_count.shape[0]

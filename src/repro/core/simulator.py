@@ -57,6 +57,12 @@ class History(NamedTuple):
       final_state: the full ``repro.opt.OptState`` after iteration K,
         including the stale-gradient bank and the precision-safe
         ``CommStats`` (exact uplink/downlink counts and payload bytes).
+      metrics: ``()`` unless the run collected metrics
+        (``collect_metrics=True``), else a ``repro.obs`` MetricBag of
+        stacked per-iteration series — ``{name: (K,) array}`` (censor
+        rate, exact uplink bytes, bank/gradient norms, stage-hook
+        observables). Collection is read-only: every other field is
+        bit-identical to a metrics-off run.
     """
     objective: jax.Array
     comm_cum: jax.Array
@@ -64,6 +70,7 @@ class History(NamedTuple):
     agg_grad_sqnorm: jax.Array
     final_params: Any
     final_state: "OptState"
+    metrics: Any = ()
 
 
 def global_loss(task: FedTask, params) -> jax.Array:
@@ -73,7 +80,8 @@ def global_loss(task: FedTask, params) -> jax.Array:
     return jnp.sum(per_worker)
 
 
-def trajectory(cfg: OptLike, task: FedTask, num_iters: int) -> History:
+def trajectory(cfg: OptLike, task: FedTask, num_iters: int,
+               collect_metrics: bool = False) -> History:
     """Pure (un-jitted) Algorithm-1 scan — the traceable core of ``run``.
 
     Args:
@@ -86,12 +94,21 @@ def trajectory(cfg: OptLike, task: FedTask, num_iters: int) -> History:
       task: the distributed problem; ``init_params``/``worker_data`` leaves
         may themselves be traced (e.g. gathered out of a stacked task bank).
       num_iters: K, the static scan length.
+      collect_metrics: also record a per-iteration ``repro.obs`` MetricBag
+        in ``History.metrics`` (static — changes the scan's outputs, so it
+        is part of the compiled program's identity). The bag rides
+        *alongside* the optimizer state: every state-carried value is
+        bit-identical to a metrics-off run (tests/test_obs.py pins this
+        against the golden fingerprints).
     Returns:
       The full ``History`` of the run (see its docstring).
     """
+    from ..obs import compile_log
     from ..opt.compat import as_optimizer
     opt = as_optimizer(cfg)
     worker_grads_fn = jax.vmap(task.grad_fn, in_axes=(None, 0))
+    # host-side tick at trace time only: how many scan programs were built
+    compile_log.record("simulator", "trajectory")
 
     def one_iter(carry, _):
         params, state = carry
@@ -101,18 +118,25 @@ def trajectory(cfg: OptLike, task: FedTask, num_iters: int) -> History:
                new_state.comm.total_uplinks,
                info.mask,
                info.agg_grad_sqnorm)
+        if collect_metrics:
+            from ..obs.metrics import step_metrics
+            bag_fn = getattr(opt, "metrics", None) or \
+                (lambda st, sc: step_metrics(opt, st, sc))
+            rec = rec + (bag_fn(new_state, info),)
         return (new_params, new_state), rec
 
     state0 = opt.init(task.init_params)
-    (params, state), (obj, comms, mask, gsq) = jax.lax.scan(
+    (params, state), recs = jax.lax.scan(
         one_iter, (task.init_params, state0), None, length=num_iters)
+    obj, comms, mask, gsq = recs[:4]
+    bags = recs[4] if collect_metrics else ()
     return History(objective=obj, comm_cum=comms, mask=mask,
                    agg_grad_sqnorm=gsq, final_params=params,
-                   final_state=state)
+                   final_state=state, metrics=bags)
 
 
 def run(cfg: OptLike, task: FedTask, num_iters: int,
-        jit: bool = True) -> History:
+        jit: bool = True, collect_metrics: bool = False) -> History:
     """Run Algorithm 1 for ``num_iters`` iterations on one configuration.
 
     Args:
@@ -122,6 +146,9 @@ def run(cfg: OptLike, task: FedTask, num_iters: int,
       task: the distributed problem (see ``FedTask``).
       num_iters: number of server iterations K.
       jit: compile the scan (default); ``False`` runs eagerly for debugging.
+      collect_metrics: record a per-round ``repro.obs`` MetricBag in
+        ``History.metrics`` (see ``trajectory``). Off by default; turning
+        it on does not change any other History field's bits.
     Returns:
       ``History`` — per-iteration trajectory plus the final optimizer state.
 
@@ -130,7 +157,8 @@ def run(cfg: OptLike, task: FedTask, num_iters: int,
     trajectories bit-exactly while compiling once for the whole grid.
     """
     def scan_all(params0):
-        return trajectory(cfg, task._replace(init_params=params0), num_iters)
+        return trajectory(cfg, task._replace(init_params=params0), num_iters,
+                          collect_metrics=collect_metrics)
 
     fn = jax.jit(scan_all) if jit else scan_all
     return fn(task.init_params)

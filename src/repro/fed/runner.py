@@ -51,6 +51,7 @@ from ..core.quantize import payload_bytes_dense
 from ..core.simulator import FedTask, global_loss
 from ..core.util import (tree_sqnorm, tree_sum_leading, tree_worker_slice)
 from ..kernels import ops as kernel_ops
+from ..obs import compile_log
 from ..opt import as_optimizer
 from ..opt.optimizer import ComposedOptimizer
 from .channel import ChannelConfig
@@ -118,6 +119,12 @@ class EdgeHistory(NamedTuple):
     final_params: Any
     final_bank: Any            # (M, ...) server stale-gradient bank
     stats: EdgeStats
+    # () unless run_edge(collect_metrics=True): per-round ``repro.obs``
+    # MetricBag series {name: (R,) array} — censor/transmit rates, drop
+    # counts, exact byte/energy counters, and the staleness histogram
+    # (how many rounds late each folded delta arrived, bucketed
+    # 0 / 1 / 2-3 / 4+)
+    metrics: Any = ()
 
 
 class _Event(NamedTuple):
@@ -150,6 +157,7 @@ def _compile(opt: ComposedOptimizer, task: FedTask):
     pallas = getattr(opt, "backend", "reference") == "pallas"
 
     def client_eval(params, data_i, ghat_row, err_row, ssq, rnd, worker):
+        compile_log.record("fed", "client_eval")   # ticks at trace time only
         g = task.grad_fn(params, data_i)
         delta = jax.tree_util.tree_map(
             lambda x, h: x.astype(h.dtype) - h, g, ghat_row)
@@ -171,6 +179,7 @@ def _compile(opt: ComposedOptimizer, task: FedTask):
         (lambda p, pp, agg: opt.server.apply(p, pp, agg))
 
     def server_update(params, prev_params, ghat):
+        compile_log.record("fed", "server_update")   # trace-time tick
         agg = tree_sum_leading(ghat)
         new_params = apply_server(params, prev_params, agg)
         # ||theta^{k+1} - theta^k||^2, broadcast with theta^{k+1} so the next
@@ -184,7 +193,8 @@ def _compile(opt: ComposedOptimizer, task: FedTask):
 
 
 def run_edge(cfg, task: FedTask, edge: EdgeConfig,
-             num_rounds: int) -> EdgeHistory:
+             num_rounds: int, *, collect_metrics: bool = False,
+             runlog=None) -> EdgeHistory:
     """Run the deployment scenario for ``num_rounds`` server rounds.
 
     Args:
@@ -196,6 +206,14 @@ def run_edge(cfg, task: FedTask, edge: EdgeConfig,
       task: the distributed problem (leaves stacked with leading axis M).
       edge: the deployment scenario (clients, channel, energy, quorum).
       num_rounds: number of server (eq.-4) updates to perform.
+      collect_metrics: record a per-round ``repro.obs`` MetricBag in
+        ``EdgeHistory.metrics`` — censor/transmit/drop counts, exact
+        byte/energy counters, and the staleness histogram (rounds-late of
+        each folded delta, bucketed 0 / 1 / 2-3 / 4+). Host-side
+        accounting only: trajectories are identical with it on or off.
+      runlog: optional ``repro.obs.RunLog``; when given, one ``"round"``
+        event (with the round's metrics, when collected) is appended per
+        server update as it completes.
     Returns:
       An ``EdgeHistory`` with per-round objective/uplink/energy/wall-clock
       trajectories and the per-client ``EdgeStats`` accounting.
@@ -285,6 +303,11 @@ def run_edge(cfg, task: FedTask, edge: EdgeConfig,
 
     arrived_from: dict[int, int] = {}   # round -> arrivals from its cohort
     fold_row = np.zeros((m,), np.int8)
+    # per-round observability counters (reset after each server update);
+    # staleness histogram buckets: folded deltas 0 / 1 / 2-3 / 4+ rounds late
+    rc = {"transmit": 0, "censor": 0, "drop": 0,
+          "staleness/h0": 0, "staleness/h1": 0, "staleness/h2_3": 0,
+          "staleness/h4p": 0}
 
     def handle(ev: _Event) -> None:
         nonlocal t, ghat, err
@@ -299,6 +322,7 @@ def run_edge(cfg, task: FedTask, edge: EdgeConfig,
                 ssq=ssq_i, rnd=jnp.asarray(rnd, jnp.int32),
                 worker=jnp.asarray(i, jnp.int32))
             if bool(transmit):
+                rc["transmit"] += 1
                 tx = edge.channel.uplink(payload_nbytes, rng)
                 stats.record_uplink(i, payload_nbytes, tx.time_s,
                                     edge.energy.tx_energy(payload_nbytes),
@@ -306,6 +330,7 @@ def run_edge(cfg, task: FedTask, edge: EdgeConfig,
                 push(ev.time + tx.time_s, "arrive", i, rnd,
                      (payload, tx.delivered, True, new_err_row))
             else:
+                rc["censor"] += 1
                 stats.record_censored(i)
                 # zero-byte beacon: the server hears "no update" after the
                 # protocol overhead; no payload energy is charged
@@ -313,6 +338,8 @@ def run_edge(cfg, task: FedTask, edge: EdgeConfig,
                      (None, True, False, None))
         else:  # arrive
             payload, delivered, transmitted, new_err_row = ev.data
+            if transmitted and not delivered:
+                rc["drop"] += 1
             if transmitted and delivered:
                 ghat = fold(ghat, payload, jnp.asarray(i))
                 if quantized:
@@ -320,6 +347,11 @@ def run_edge(cfg, task: FedTask, edge: EdgeConfig,
                         lambda e, n: e.at[i].set(n.astype(e.dtype)),
                         err, new_err_row)
                 fold_row[i] = 1
+                staleness = round_ - ev.round_
+                rc["staleness/h0" if staleness <= 0 else
+                   "staleness/h1" if staleness == 1 else
+                   "staleness/h2_3" if staleness <= 3 else
+                   "staleness/h4p"] += 1
                 if ev.round_ != round_:
                     stats.record_stale(i)
             idle[i] = True
@@ -329,6 +361,7 @@ def run_edge(cfg, task: FedTask, edge: EdgeConfig,
 
     objective, comm_cum, masks, gsq_hist = [], [], [], []
     wall, energy_cum, bytes_cum = [], [], []
+    bag_hist: list[dict] = []
 
     while round_ < num_rounds:
         cohort = dispatch_cohort()
@@ -347,11 +380,39 @@ def run_edge(cfg, task: FedTask, edge: EdgeConfig,
         wall.append(t)
         energy_cum.append(stats.total_energy_j)
         bytes_cum.append(stats.total_uplink_bytes)
+        if collect_metrics or runlog is not None:
+            decided = rc["transmit"] + rc["censor"]
+            bag = {
+                "censor_rate": rc["censor"] / max(1, decided),
+                "transmit_rate": rc["transmit"] / max(1, decided),
+                "drops": float(rc["drop"]),
+                "folds": float(masks[-1].sum()),
+                "agg_grad_sqnorm": gsq_hist[-1],
+                "bank_sqnorm": float(tree_sqnorm(ghat)),
+                "comm/uplink_total": float(stats.total_uplinks),
+                "comm/uplink_bytes": float(stats.total_uplink_bytes),
+                "energy_j": float(stats.total_energy_j),
+                "wall_clock_s": float(t),
+                "staleness/h0": float(rc["staleness/h0"]),
+                "staleness/h1": float(rc["staleness/h1"]),
+                "staleness/h2_3": float(rc["staleness/h2_3"]),
+                "staleness/h4p": float(rc["staleness/h4p"]),
+            }
+            if collect_metrics:
+                bag_hist.append(bag)
+            if runlog is not None:
+                runlog.write_round(round_, bag, cohort_size=len(cohort))
+        for k in rc:
+            rc[k] = 0
         arrived_from.pop(round_, None)
         round_ += 1
 
     stats.rounds = num_rounds
     stats.wall_clock_s = t
+    metrics: Any = ()
+    if collect_metrics and bag_hist:
+        metrics = {k: np.asarray([b[k] for b in bag_hist])
+                   for k in bag_hist[0]}
     return EdgeHistory(
         objective=np.asarray(objective),
         comm_cum=np.asarray(comm_cum, np.int64),
@@ -363,6 +424,7 @@ def run_edge(cfg, task: FedTask, edge: EdgeConfig,
         final_params=params,
         final_bank=ghat,
         stats=stats,
+        metrics=metrics,
     )
 
 

@@ -37,24 +37,46 @@ import jax.numpy as jnp
 
 from . import censor, flash_attention, hb_update, quantize_ef, ref
 from .common import interpret_default
+from ..obs import compile_log
 
 _interpret_default = interpret_default      # legacy alias (pre-backend name)
 
 
 # ------------------------------------------------------- trace accounting
-trace_counts: dict[str, int] = {}
+# The counters live in the process-wide ``repro.obs.compile_log`` under the
+# "kernels" namespace; ``trace_counts`` is the *live* dict for that
+# namespace (the same object the recorder updates), kept for the original
+# API. ``obs.compile_log.snapshot()`` sees these ticks as "kernels/<name>"
+# next to every other surface's counters.
+trace_counts: dict[str, int] = compile_log.namespace("kernels")
 
 
 def reset_trace_counts() -> None:
     """Zero the per-dispatch trace counters."""
-    trace_counts.clear()
+    compile_log.reset("kernels")
 
 
 def _traced(name: str) -> None:
-    trace_counts[name] = trace_counts.get(name, 0) + 1
+    compile_log.record("kernels", name)
+
+
+def _dispatch(fn):
+    """Tree-dispatch wrapper: tick the compile log at trace time and wrap
+    the kernel calls in a ``jax.named_scope`` so profiler traces (see
+    ``repro.obs.profile``) attribute device time to the dispatch by name.
+    The scope is HLO metadata only — numerics are untouched."""
+    name = fn.__name__
+
+    @functools.wraps(fn)
+    def wrapped(*args, **kwargs):
+        _traced(name)
+        with jax.named_scope(f"kernels/{name}"):
+            return fn(*args, **kwargs)
+    return wrapped
 
 
 # ----------------------------------------------------- tree-level dispatch
+@_dispatch
 def tree_delta_sqnorms(grads, bank, *, block_rows: int = 256,
                        interpret: bool | None = None) -> jax.Array:
     """(M,) per-worker ||g_m - ghat_m||^2 over a whole pytree.
@@ -67,7 +89,6 @@ def tree_delta_sqnorms(grads, bank, *, block_rows: int = 256,
     censor decision landing exactly on the eq.-(8) threshold could
     therefore differ — see ``docs/kernels.md``).
     """
-    _traced("tree_delta_sqnorms")
     leaves_g = jax.tree_util.tree_leaves(grads)
     leaves_h = jax.tree_util.tree_leaves(bank)
     acc = jnp.zeros((leaves_h[0].shape[0],), jnp.float32)
@@ -77,10 +98,10 @@ def tree_delta_sqnorms(grads, bank, *, block_rows: int = 256,
     return acc
 
 
+@_dispatch
 def tree_sqnorms(pending, *, block_rows: int = 256,
                  interpret: bool | None = None) -> jax.Array:
     """(M,) per-worker ||x_m||^2 of a materialized pending-delta pytree."""
-    _traced("tree_sqnorms")
     leaves = jax.tree_util.tree_leaves(pending)
     acc = jnp.zeros((leaves[0].shape[0],), jnp.float32)
     for x in leaves:
@@ -89,6 +110,7 @@ def tree_sqnorms(pending, *, block_rows: int = 256,
     return acc
 
 
+@_dispatch
 def tree_sqnorm_row(pending_row, *, block_rows: int = 256,
                     interpret: bool | None = None) -> jax.Array:
     """One worker's ||x||^2 (the ``repro.fed`` per-client entry point).
@@ -97,7 +119,6 @@ def tree_sqnorm_row(pending_row, *, block_rows: int = 256,
     censor decision — are bit-identical to the batched step's per-worker
     slice.
     """
-    _traced("tree_sqnorm_row")
     leaves = jax.tree_util.tree_leaves(pending_row)
     acc = jnp.zeros((1,), jnp.float32)
     for x in leaves:
@@ -106,26 +127,27 @@ def tree_sqnorm_row(pending_row, *, block_rows: int = 256,
     return acc[0]
 
 
+@_dispatch
 def tree_censor_bank_advance(grads, bank, mask, *, block_rows: int = 256,
                              interpret: bool | None = None):
     """Fused censor-select bank advance: ``ghat + mask * (g - ghat)``."""
-    _traced("tree_censor_bank_advance")
     return jax.tree_util.tree_map(
         lambda g, h: censor.censor_bank_advance(
             g, h, mask, block_rows=block_rows, interpret=interpret),
         grads, bank)
 
 
+@_dispatch
 def tree_bank_advance(bank, payload, mask, *, block_rows: int = 256,
                       interpret: bool | None = None):
     """Fused bank advance from an encoded payload: ``ghat + mask * q``."""
-    _traced("tree_bank_advance")
     return jax.tree_util.tree_map(
         lambda h, q: censor.bank_advance(
             h, q, mask, block_rows=block_rows, interpret=interpret),
         bank, payload)
 
 
+@_dispatch
 def tree_int8_roundtrip_ef(pending, err, mask, *, block_rows: int = 256,
                            interpret: bool | None = None):
     """Fused per-worker int8 round-trip + error-feedback over a pytree.
@@ -135,7 +157,6 @@ def tree_int8_roundtrip_ef(pending, err, mask, *, block_rows: int = 256,
     one fused sweep emits the dequantized payload and the next
     error-feedback leaf together. Returns ``(payload_tree, new_err_tree)``.
     """
-    _traced("tree_int8_roundtrip_ef")
 
     def one_leaf(p, e):
         amax = quantize_ef.absmax_batched(p, block_rows=block_rows,
@@ -152,6 +173,7 @@ def tree_int8_roundtrip_ef(pending, err, mask, *, block_rows: int = 256,
     return payload, new_err
 
 
+@_dispatch
 def tree_hb_update(params, prev_params, agg, alpha, beta, *,
                    block_rows: int = 256, interpret: bool | None = None):
     """Fused eq.-(4) server update over a whole parameter pytree.
@@ -160,7 +182,6 @@ def tree_hb_update(params, prev_params, agg, alpha, beta, *,
     across a hyperparameter grid). Plain GD is ``beta = 0``, bit-identical
     to the reference ``GradientDescent`` stage by construction.
     """
-    _traced("tree_hb_update")
     return jax.tree_util.tree_map(
         lambda t, tp, g: hb_update.hb_update(
             t, g, tp, alpha, beta, block_rows=block_rows,

@@ -1,0 +1,206 @@
+"""Schema-versioned BENCH_*.json artifacts: build, validate, diff-ready.
+
+``benchmarks/run.py --json`` emits one artifact per invocation; this
+module owns its layout so every producer (the benchmark driver, CI's
+smoke job) and consumer (``tools/bench_diff.py``, the CI validator)
+agrees on one contract:
+
+    {"schema_version": 1,
+     "kind": "repro-bench",
+     "name": "<artifact name>",
+     "env": {"jax_version": "...", "backend": "cpu|tpu|gpu",
+             "x64": true|false},
+     "registry": ["chb", "gd", ...],
+     "failed": ["<benchmark name>", ...],
+     "benchmarks": {"<name>": {"row": "name,us_per_call,derived",
+                               "seconds": <float>, ...payload}}}
+
+Per-benchmark payloads are free-form beyond the required ``row``; the
+conventional keys (``specs`` — per-point ``repro.opt`` registry specs,
+``backend`` — "reference"/"pallas" axes, ``measured_bytes`` /
+``analytic_bytes`` — roofline accounting, ``trace_counts`` — retrace
+audit) are documented in docs/observability.md. ``validate_artifact``
+enforces the envelope plus those conventions where present, and the CLI
+(``python -m repro.obs.bench --validate PATH``) is what CI runs against
+the artifact it just produced.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Optional
+
+#: Version of the artifact envelope (bump on breaking layout changes).
+SCHEMA_VERSION = 1
+
+#: The ``kind`` tag distinguishing these artifacts from other JSON files.
+KIND = "repro-bench"
+
+
+def environment() -> dict:
+    """The execution environment stamped into every artifact."""
+    import jax
+    return {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "x64": bool(jax.config.read("jax_enable_x64")),
+    }
+
+
+def make_artifact(name: str, benchmarks: dict, *,
+                  failed: Optional[list] = None,
+                  registry: Optional[list] = None,
+                  extra: Optional[dict] = None) -> dict:
+    """Assemble a schema-conforming artifact document.
+
+    Args:
+      name: artifact name (conventionally the ``BENCH_<name>.json`` stem).
+      benchmarks: ``{bench_name: payload}``; every payload must carry a
+        ``row`` CSV string (the driver adds it).
+      failed: benchmark names that raised (empty = clean run).
+      registry: the ``repro.opt`` algorithm names available when the
+        artifact was produced (provenance for spec round-trips).
+      extra: additional top-level keys (must not collide with the schema).
+    Returns:
+      The artifact dict (validated — raises ``ValueError`` on a
+      malformed document, so producers fail at build time, not in CI).
+    """
+    doc: dict[str, Any] = {
+        "schema_version": SCHEMA_VERSION,
+        "kind": KIND,
+        "name": name,
+        "env": environment(),
+        "registry": list(registry or []),
+        "failed": list(failed or []),
+        "benchmarks": dict(benchmarks),
+    }
+    for k, v in (extra or {}).items():
+        if k in doc:
+            raise ValueError(f"extra key {k!r} collides with the schema")
+        doc[k] = v
+    errors = validate_artifact(doc)
+    if errors:
+        raise ValueError("malformed artifact: " + "; ".join(errors))
+    return doc
+
+
+def validate_artifact(doc: Any) -> list[str]:
+    """All schema violations in ``doc`` (empty list = valid).
+
+    Checks the envelope (version, kind, env, benchmarks) and the
+    documented per-benchmark conventions where the keys are present
+    (``specs`` must be a list of dicts/None, ``backend`` a string, byte
+    counts numeric). Unknown extra keys are allowed — the schema is
+    open for extension, closed for modification.
+    """
+    errs: list[str] = []
+    if not isinstance(doc, dict):
+        return [f"artifact must be a JSON object, got {type(doc).__name__}"]
+    ver = doc.get("schema_version")
+    if not isinstance(ver, int):
+        errs.append("schema_version missing or not an int")
+    elif ver > SCHEMA_VERSION:
+        errs.append(f"schema_version {ver} is newer than supported "
+                    f"{SCHEMA_VERSION}")
+    if doc.get("kind") != KIND:
+        errs.append(f"kind must be {KIND!r}, got {doc.get('kind')!r}")
+    if not isinstance(doc.get("name"), str) or not doc.get("name"):
+        errs.append("name missing or empty")
+    env = doc.get("env")
+    if not isinstance(env, dict):
+        errs.append("env missing or not an object")
+    else:
+        for k in ("jax_version", "backend", "x64"):
+            if k not in env:
+                errs.append(f"env.{k} missing")
+    if not isinstance(doc.get("failed"), list):
+        errs.append("failed missing or not a list")
+    benches = doc.get("benchmarks")
+    if not isinstance(benches, dict):
+        errs.append("benchmarks missing or not an object")
+        return errs
+    for bname, payload in benches.items():
+        where = f"benchmarks[{bname!r}]"
+        if not isinstance(payload, dict):
+            errs.append(f"{where} is not an object")
+            continue
+        if not isinstance(payload.get("row"), str):
+            errs.append(f"{where}.row missing or not a string")
+        if "seconds" in payload and \
+                not isinstance(payload["seconds"], (int, float)):
+            errs.append(f"{where}.seconds is not a number")
+        if "specs" in payload:
+            specs = payload["specs"]
+            vals = list(specs.values()) if isinstance(specs, dict) \
+                else specs if isinstance(specs, list) else None
+            if vals is None or any(
+                    s is not None and not isinstance(s, dict)
+                    for s in vals):
+                errs.append(f"{where}.specs must be a list (per point) or "
+                            "name-keyed object of spec objects/nulls")
+        if "backend" in payload and not isinstance(payload["backend"],
+                                                   (str, list)):
+            errs.append(f"{where}.backend must be a string or list")
+        for k in ("measured_bytes", "analytic_bytes"):
+            if k in payload and not isinstance(payload[k], dict):
+                errs.append(f"{where}.{k} must be an object "
+                            "(per-backend/per-kernel byte counts)")
+    return errs
+
+
+def write_artifact(doc: dict, path: str) -> str:
+    """Validate and write an artifact; returns ``path``."""
+    errors = validate_artifact(doc)
+    if errors:
+        raise ValueError("refusing to write malformed artifact: "
+                         + "; ".join(errors))
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def load_artifact(path: str, *, validate: bool = True) -> dict:
+    """Load (and by default validate) a BENCH_*.json artifact."""
+    with open(path) as f:
+        doc = json.load(f)
+    if validate:
+        errors = validate_artifact(doc)
+        if errors:
+            raise ValueError(f"{path}: " + "; ".join(errors))
+    return doc
+
+
+def _main(argv: Optional[list] = None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.bench",
+        description="Validate BENCH_*.json artifacts against the schema.")
+    ap.add_argument("--validate", metavar="PATH", action="append",
+                    default=[], help="artifact file to validate "
+                    "(repeatable); exits 1 on any violation")
+    args = ap.parse_args(argv)
+    if not args.validate:
+        ap.error("nothing to do; pass --validate PATH")
+    bad = 0
+    for path in args.validate:
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"{path}: unreadable: {e}")
+            bad += 1
+            continue
+        errors = validate_artifact(doc)
+        if errors:
+            bad += 1
+            for e in errors:
+                print(f"{path}: {e}")
+        else:
+            n = len(doc.get("benchmarks", {}))
+            print(f"{path}: ok (schema_version="
+                  f"{doc.get('schema_version')}, {n} benchmark(s))")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(_main())

@@ -1,0 +1,96 @@
+"""Compile/retrace accounting for every execution surface.
+
+``kernels/ops.trace_counts`` proved the pattern: a host-side counter that
+ticks when a dispatch function's Python body runs — i.e. at *trace* time,
+never at execution time — measures exactly how many programs XLA was asked
+to build. This module generalizes it into one process-wide log that any
+surface can record into under a namespace:
+
+  * ``kernels``   — one tick per Pallas tree-dispatch trace (``ops.py``);
+  * ``simulator`` — one tick per ``trajectory`` trace (scan body build);
+  * ``sweep``     — one tick per compiled partition program;
+  * ``fed``       — one tick per event-runtime closure trace.
+
+``namespace(name)`` returns the *live* counter dict for a namespace — the
+same object the recorder updates — so legacy views (``ops.trace_counts``)
+stay plain dicts. ``snapshot()`` flattens everything to ``"ns/key"`` for
+artifacts, and ``track()`` captures the delta across a block:
+
+    with compile_log.track() as log:
+        sweep.run_sweep(grid, task, num_iters=300, base_cfg=base)
+    assert log.counts.get("kernels/tree_hb_update", 0) == 1
+
+which is how the regression tests pin "enabling metrics adds zero extra
+compiles per sweep partition".
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+_namespaces: dict[str, dict[str, int]] = {}
+
+
+def namespace(name: str) -> dict[str, int]:
+    """The live counter dict for ``name`` (created on first use)."""
+    return _namespaces.setdefault(name, {})
+
+
+def record(ns: str, key: str, n: int = 1) -> None:
+    """Tick ``ns/key`` by ``n`` (call from trace-time Python only)."""
+    d = namespace(ns)
+    d[key] = d.get(key, 0) + n
+
+
+def snapshot() -> dict[str, int]:
+    """All counters flattened to ``"ns/key"`` (a copy, artifact-ready)."""
+    return {f"{ns}/{k}": v for ns, d in sorted(_namespaces.items())
+            for k, v in sorted(d.items())}
+
+
+def counts(ns: str) -> dict[str, int]:
+    """A copy of one namespace's counters."""
+    return dict(namespace(ns))
+
+
+def reset(ns: str | None = None) -> None:
+    """Zero one namespace (or every namespace) in place.
+
+    Clearing in place keeps live views (``ops.trace_counts``) attached.
+    """
+    if ns is not None:
+        namespace(ns).clear()
+        return
+    for d in _namespaces.values():
+        d.clear()
+
+
+@dataclasses.dataclass
+class TrackedCounts:
+    """The delta captured by :func:`track` (filled at block exit)."""
+
+    counts: dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def total(self, ns: str | None = None) -> int:
+        """Sum of all ticks, optionally restricted to one namespace."""
+        return sum(v for k, v in self.counts.items()
+                   if ns is None or k.startswith(ns + "/"))
+
+
+@contextlib.contextmanager
+def track():
+    """Capture the counter *delta* across a block, without resetting.
+
+    Yields a :class:`TrackedCounts` whose ``counts`` maps flattened
+    ``"ns/key"`` names to how many ticks happened inside the block. Nested
+    tracking works; concurrent recording from other threads is attributed
+    to every open tracker (counters are process-global by design).
+    """
+    before = snapshot()
+    out = TrackedCounts()
+    try:
+        yield out
+    finally:
+        after = snapshot()
+        out.counts = {k: v - before.get(k, 0) for k, v in after.items()
+                      if v != before.get(k, 0)}

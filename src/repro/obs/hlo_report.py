@@ -1,0 +1,176 @@
+"""Compiled-HLO hotspot reports: trip-count-weighted collectives and HBM.
+
+The profiler half of ``repro.obs`` answers "where did the time go" on a
+timeline; this module answers "where will the bytes go" *statically*,
+from the compiled (post-SPMD, scheduled) HLO text. It builds on
+``repro.launch.hlo_analysis`` — which reconstructs the call graph and
+resolves canonical ``lax.scan`` trip counts — and ranks individual ops
+by bytes x trips, per device.
+
+Two entry points:
+
+  * :func:`report` — structured rows (JSON-ready dicts), what the tests
+    and artifact writers consume.
+  * :func:`format_report` — the human-readable table the
+    ``tools/top_collectives.py`` CLI prints.
+
+Plus :func:`compiled_text` to get scheduled HLO from any jittable
+function, and :func:`cost_summary` for XLA's own per-module
+``cost_analysis`` numbers (the "measured bytes" side of the roofline
+benchmarks — unlike this module's loop-aware totals, XLA counts a while
+body once; both views are reported so the ratio itself is informative).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from ..launch import hlo_analysis as ha
+
+
+def compiled_text(fn, *args, static_argnums=(), donate_argnums=()) -> str:
+    """Scheduled HLO text of ``fn`` compiled for ``args``."""
+    import jax
+    jitted = jax.jit(fn, static_argnums=static_argnums,
+                     donate_argnums=donate_argnums)
+    return jitted.lower(*args).compile().as_text()
+
+
+def cost_summary(fn, *args, static_argnums=()) -> dict:
+    """XLA's ``cost_analysis`` for ``fn(*args)``: flops + bytes accessed.
+
+    Returns ``{"flops": float, "bytes_accessed": float}`` (zeros when the
+    backend reports nothing). This is the *measured* side of the roofline
+    artifacts: what the compiler itself accounts for the module, as
+    opposed to the analytic model's hand-counted bytes.
+    """
+    import jax
+    compiled = jax.jit(fn, static_argnums=static_argnums) \
+        .lower(*args).compile()
+    costs = compiled.cost_analysis()
+    if isinstance(costs, (list, tuple)):
+        costs = costs[0] if costs else {}
+    costs = costs or {}
+    return {"flops": float(costs.get("flops", 0.0)),
+            "bytes_accessed": float(costs.get("bytes accessed", 0.0))}
+
+
+def _call_multipliers(comps: dict) -> tuple[dict, set]:
+    """Per-computation execution multipliers + the control-flow set.
+
+    A computation reached through a ``while`` body runs ``trip_count``
+    times per caller execution; multipliers are additive over call sites
+    and multiplicative down the graph. ``control`` holds computations on
+    the entry control path (whose top-level ops touch HBM, as opposed to
+    fused subcomputations).
+    """
+    entry = next(c for c in comps.values() if c.is_entry)
+    edges: dict[str, list] = {c: [] for c in comps}
+    for comp in comps.values():
+        for i in comp.instrs:
+            if i.opcode == "while":
+                bm = ha._BODY_RE.search(i.rest)
+                cm = ha._COND_RE.search(i.rest)
+                trips = ha._trip_count(comps[cm.group(1)]) if cm and \
+                    cm.group(1) in comps else 1
+                if bm and bm.group(1) in comps:
+                    edges[comp.name].append((bm.group(1), trips, True))
+                if cm and cm.group(1) in comps:
+                    edges[comp.name].append((cm.group(1), trips, False))
+            else:
+                keeps = i.opcode in ("call", "conditional")
+                for callee in ha._CALLS_RE.findall(i.rest):
+                    if callee in comps:
+                        edges[comp.name].append((callee, 1, keeps))
+
+    order: list[str] = []
+    seen: set = set()
+
+    def topo(name: str) -> None:
+        if name in seen:
+            return
+        seen.add(name)
+        for callee, _, _ in edges[name]:
+            topo(callee)
+        order.append(name)
+
+    topo(entry.name)
+    mult: dict[str, float] = {c: 0.0 for c in comps}
+    mult[entry.name] = 1.0
+    control: set = {entry.name}
+    for name in reversed(order):
+        for callee, trips, keeps in edges[name]:
+            mult[callee] += mult[name] * trips
+            if name in control and keeps:
+                control.add(callee)
+    return mult, control
+
+
+def report(hlo_text: str, top: Optional[int] = None) -> dict:
+    """Trip-weighted per-op hotspot rows for a compiled module.
+
+    Args:
+      hlo_text: scheduled HLO (``compiled_text`` output).
+      top: keep only the heaviest N rows per section (None = all).
+    Returns:
+      ``{"collectives": [...], "hbm_ops": [...], "totals": {...}}`` —
+      rows sorted by descending weighted bytes; ``totals`` is
+      ``hlo_analysis.analyze``'s module-wide summary (flops, loop-aware
+      hbm_bytes, per-kind collective traffic).
+    """
+    comps = ha.parse_module(hlo_text)
+    if not any(c.is_entry for c in comps.values()):
+        return {"collectives": [], "hbm_ops": [],
+                "totals": {"flops": 0.0, "hbm_bytes": 0.0,
+                           "collectives": {}}}
+    mult, control = _call_multipliers(comps)
+
+    colls: list[dict] = []
+    hbms: list[dict] = []
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        sym = comp.symbol_table()
+        for i in comp.instrs:
+            for k in ha.COLLECTIVE_OPS:
+                if i.opcode in (k, k + "-start"):
+                    w = 2 if k == "all-reduce" else 1
+                    colls.append({
+                        "bytes": m * w * ha.shape_bytes(i.result_type),
+                        "mult": m, "kind": k,
+                        "type": i.result_type[:70],
+                    })
+            if cname in control and i.opcode not in ha._SKIP_BYTES_OPS \
+                    and i.opcode != "while" \
+                    and not i.opcode.endswith("-done"):
+                hbms.append({
+                    "bytes": m * ha._instr_hbm_bytes(i, sym, comps),
+                    "mult": m, "opcode": i.opcode,
+                    "name": i.name[:40], "type": i.result_type[:60],
+                })
+    colls.sort(key=lambda r: r["bytes"], reverse=True)
+    hbms.sort(key=lambda r: r["bytes"], reverse=True)
+    if top is not None:
+        colls, hbms = colls[:top], hbms[:top]
+    return {"collectives": colls, "hbm_ops": hbms,
+            "totals": ha.analyze(hlo_text)}
+
+
+def top_collectives(fn, *args, top: int = 14, static_argnums=(),
+                    donate_argnums=()) -> dict:
+    """Compile ``fn(*args)`` and report its heaviest ops (see ``report``)."""
+    return report(compiled_text(fn, *args, static_argnums=static_argnums,
+                                donate_argnums=donate_argnums), top=top)
+
+
+def format_report(rep: dict) -> str:
+    """The classic two-table text rendering of a ``report`` result."""
+    lines = ["== top collectives (bytes x trips) =="]
+    for r in rep["collectives"]:
+        lines.append(f"{r['bytes']/1e9:9.1f}GB m={r['mult']:7.0f} "
+                     f"{r['kind']:18s} {r['type']}")
+    lines.append("== top HBM ops ==")
+    for r in rep["hbm_ops"]:
+        lines.append(f"{r['bytes']/1e9:9.1f}GB m={r['mult']:7.0f} "
+                     f"{r['opcode']:18s} {r['name']:40s} {r['type']}")
+    return "\n".join(lines)

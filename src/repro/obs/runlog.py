@@ -1,0 +1,135 @@
+"""JSONL run logging: one event per round / sweep point, host-side.
+
+``RunLog`` is the sink half of ``repro.obs``: the in-graph ``MetricBag``
+(see ``obs.metrics``) produces named scalar series on device, and the
+RunLog writes them — together with the run's identity (the ``repro.opt``
+registry spec, the backend, free-form tags) — as newline-delimited JSON,
+one self-contained object per line. JSONL because runs append
+incrementally (an event-driven ``repro.fed`` run logs as rounds complete,
+not at exit) and because downstream tooling (``tools/bench_diff.py``,
+pandas, ``jq``) can stream it without loading the whole file.
+
+Event schema (documented in docs/observability.md, versioned by
+``EVENT_SCHEMA_VERSION``):
+
+    {"schema_version": 1, "event": "<kind>", "step": <int|null>,
+     "run": "<name>", "backend": "<reference|pallas|null>",
+     "spec": {...} | null, "metrics": {"<name>": <float>, ...}, ...tags}
+
+``metrics`` values are plain floats (device scalars are pulled to host at
+write time); ``spec`` is the full optimizer spec when the caller provides
+one, so every line is reproducible in isolation.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, IO, Optional
+
+import numpy as np
+
+#: Version of the per-line event schema (bump on breaking layout changes).
+EVENT_SCHEMA_VERSION = 1
+
+
+def _jsonable(v: Any) -> Any:
+    """Pull device/numpy scalars and arrays to JSON-native values."""
+    if isinstance(v, (str, bool, int, float)) or v is None:
+        return v
+    if isinstance(v, dict):
+        return {str(k): _jsonable(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_jsonable(x) for x in v]
+    arr = np.asarray(v)
+    if arr.ndim == 0:
+        return arr.item()
+    return arr.tolist()
+
+
+class RunLog:
+    """Append-only JSONL writer for run events.
+
+    Args:
+      path: file to append to (created if missing), or ``None`` to write
+        to an in-memory buffer (``.lines`` — useful for tests and for
+        callers that embed the events in a larger artifact).
+      run: run name stamped on every event.
+      backend: execution backend stamped on every event ("reference" /
+        "pallas" / None).
+      spec: the run's ``repro.opt`` registry spec; stamped on every event
+        unless the event carries its own (per-point sweeps).
+
+    Usable as a context manager; ``close`` flushes and releases the file.
+    """
+
+    def __init__(self, path: Optional[str] = None, *, run: str = "run",
+                 backend: Optional[str] = None,
+                 spec: Optional[dict] = None):
+        self.path = path
+        self.run = run
+        self.backend = backend
+        self.spec = spec
+        self.lines: list[str] = []
+        self._fh: Optional[IO[str]] = None
+        if path is not None:
+            d = os.path.dirname(path)
+            if d:
+                os.makedirs(d, exist_ok=True)
+            self._fh = open(path, "a")
+
+    # ------------------------------------------------------------- events
+    def write(self, event: str, *, step: Optional[int] = None,
+              metrics: Optional[dict] = None,
+              spec: Optional[dict] = None, **tags: Any) -> dict:
+        """Append one event line; returns the event dict that was written."""
+        doc: dict[str, Any] = {
+            "schema_version": EVENT_SCHEMA_VERSION,
+            "event": event,
+            "step": step,
+            "run": self.run,
+            "backend": self.backend,
+            "spec": _jsonable(spec if spec is not None else self.spec),
+            "metrics": {k: _jsonable(v)
+                        for k, v in (metrics or {}).items()},
+        }
+        for k, v in tags.items():
+            doc.setdefault(k, _jsonable(v))
+        line = json.dumps(doc, sort_keys=True)
+        self.lines.append(line)
+        if self._fh is not None:
+            self._fh.write(line + "\n")
+            self._fh.flush()
+        return doc
+
+    def write_round(self, step: int, metrics: dict, **tags: Any) -> dict:
+        """One optimization round's MetricBag (event kind ``"round"``)."""
+        return self.write("round", step=step, metrics=metrics, **tags)
+
+    def write_point(self, index: int, metrics: dict,
+                    spec: Optional[dict] = None, **tags: Any) -> dict:
+        """One sweep point's summary (event kind ``"point"``)."""
+        return self.write("point", step=index, metrics=metrics, spec=spec,
+                          **tags)
+
+    # ---------------------------------------------------------- lifecycle
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    def __enter__(self) -> "RunLog":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def read_jsonl(path: str) -> list[dict]:
+    """Load every event of a JSONL run log (skipping blank lines)."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out

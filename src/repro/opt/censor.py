@@ -61,6 +61,15 @@ class CensorPolicy(Protocol):
         """One worker's decision (bool scalar) for the event runtime."""
         ...
 
+    def metrics(self, state) -> dict:
+        """Optional ``repro.obs`` hook: stage-local scalar observables.
+
+        Called with the policy's own state slice after each step; returned
+        keys are namespaced ``censor/<kind>/<key>`` in the MetricBag.
+        Must be read-only (metric collection never perturbs the run).
+        """
+        ...
+
 
 @dataclasses.dataclass(frozen=True)
 class NeverCensor:
@@ -76,6 +85,9 @@ class NeverCensor:
 
     def client_decide(self, round_index, worker, delta_sq, step_sq):
         return jnp.ones((), jnp.bool_)
+
+    def metrics(self, state) -> dict:
+        return {}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,6 +125,11 @@ class Eq8Censor:
             return jnp.ones((), jnp.bool_)
         return delta_sq > _eps_cast(self.eps1, step_sq) * step_sq
 
+    def metrics(self, state) -> dict:
+        # the threshold itself (possibly traced): a swept eps1 shows up in
+        # the per-point metric series, making sweep bags self-describing
+        return {"eps1": jnp.asarray(self.eps1, jnp.float32)}
+
 
 @dataclasses.dataclass(frozen=True)
 class AdaptiveCensor:
@@ -145,6 +162,9 @@ class AdaptiveCensor:
         raise NotImplementedError(
             "adaptive censoring needs the whole cohort's deltas; it cannot "
             "run in the event-driven fed runtime")
+
+    def metrics(self, ema) -> dict:
+        return {"ema_mean": jnp.mean(ema), "ema_max": jnp.max(ema)}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -192,3 +212,8 @@ class StochasticCensor:
     def client_decide(self, round_index, worker, delta_sq, step_sq):
         u = self._uniform(round_index, worker)
         return delta_sq > u * self._tau(round_index)
+
+    def metrics(self, k) -> dict:
+        # k is the post-step round counter, so tau is the threshold the
+        # NEXT round will test against (the decayed sequence, observable)
+        return {"tau": self._tau(k), "round": k}

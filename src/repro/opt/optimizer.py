@@ -184,9 +184,25 @@ class ComposedOptimizer:
             censor=self.censor.init(self.num_workers),
         )
 
+    def metrics(self, state: OptState, stats: StepStats):
+        """Per-round ``repro.obs`` MetricBag for a completed step.
+
+        Read-only: every entry is derived from ``state``/``stats`` (plus
+        each stage's ``metrics`` hook on its own state slice), so
+        collecting never perturbs the trajectory. See
+        ``repro.obs.metrics.step_metrics`` for the bag's contents.
+        """
+        from ..obs import metrics as obs_metrics
+        return obs_metrics.step_metrics(self, state, stats)
+
     def step(self, state: OptState, params, worker_grads
              ) -> tuple[OptState, Any, StepStats]:
         """One iteration of Algorithm 1 (see ``api.FedOptimizer.step``)."""
+        with jax.named_scope(f"chb_step[{self.backend}]"):
+            return self._step(state, params, worker_grads)
+
+    def _step(self, state: OptState, params, worker_grads
+              ) -> tuple[OptState, Any, StepStats]:
         # per_tensor granularity binds to the eq.-(8) censor only; any other
         # policy (never / adaptive / stochastic) degenerates to the global
         # path, mirroring the legacy eps1==0 behavior.

@@ -35,6 +35,15 @@ class ServerUpdate(Protocol):
         """theta^{k+1} from (theta^k, theta^{k-1}, grad_k)."""
         ...
 
+    def metrics(self) -> dict:
+        """Optional ``repro.obs`` hook: stage-local scalar observables.
+
+        Keys are namespaced ``server/<kind>/<key>``. The built-in servers
+        report their (possibly traced) step scalars so a sweep's metric
+        series identifies each point's hyperparameters. Must be read-only.
+        """
+        ...
+
 
 @dataclasses.dataclass(frozen=True)
 class HeavyBall:
@@ -49,6 +58,10 @@ class HeavyBall:
                               + scal(self.beta, t) * (t - tp)).astype(t.dtype),
             params, agg, prev_params)
 
+    def metrics(self) -> dict:
+        return {"alpha": jnp.asarray(self.alpha, jnp.float32),
+                "beta": jnp.asarray(self.beta, jnp.float32)}
+
 
 @dataclasses.dataclass(frozen=True)
 class GradientDescent:
@@ -58,3 +71,6 @@ class GradientDescent:
 
     def apply(self, params, prev_params, agg):
         return HeavyBall(self.alpha, 0.0).apply(params, prev_params, agg)
+
+    def metrics(self) -> dict:
+        return {"alpha": jnp.asarray(self.alpha, jnp.float32)}

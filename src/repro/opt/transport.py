@@ -73,6 +73,14 @@ class Transport(Protocol):
         """Static uplink bytes for one transmission of this pytree."""
         ...
 
+    def metrics(self, err) -> dict:
+        """Optional ``repro.obs`` hook: stage-local scalar observables.
+
+        Called with the transport's error-feedback state after each step;
+        keys are namespaced ``transport/<kind>/<key>``. Must be read-only.
+        """
+        ...
+
 
 @dataclasses.dataclass(frozen=True)
 class DenseTransport:
@@ -107,6 +115,9 @@ class DenseTransport:
 
     def payload_bytes(self, params) -> int:
         return payload_bytes_dense(params)
+
+    def metrics(self, err) -> dict:
+        return {}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -148,3 +159,9 @@ class Int8Transport:
 
     def payload_bytes(self, params) -> int:
         return payload_bytes_int8(params)
+
+    def metrics(self, err) -> dict:
+        # ||EF bank||^2: how much un-transmitted quantization residual the
+        # cohort is carrying (an extra read-sweep; metrics are opt-in)
+        from ..core.util import tree_sqnorm
+        return {"ef_residual_sqnorm": tree_sqnorm(err)}

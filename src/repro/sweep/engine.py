@@ -119,7 +119,8 @@ def run_sweep(grid: Union[ConfigGrid, Sequence[GridPoint]],
               num_iters: int,
               task_factory: Optional[TaskFactory] = None,
               base_cfg=None,
-              vectorize: bool = False) -> "SweepResult":
+              vectorize: bool = False,
+              collect_metrics: bool = False) -> "SweepResult":
     """Run every grid point as (a few) single compiled device programs.
 
     Args:
@@ -139,6 +140,12 @@ def run_sweep(grid: Union[ConfigGrid, Sequence[GridPoint]],
       vectorize: ``False`` (default) = ``lax.map``, bit-exact vs
         ``simulator.run``; ``True`` = ``vmap``, faster on large grids but
         ulp-divergent (see module docstring).
+      collect_metrics: thread a per-round ``repro.obs`` MetricBag through
+        every point's trajectory (``History.metrics`` becomes a
+        ``{name: (K,) array}`` series). Static per partition — it changes
+        the mapped program's outputs but not its partition key, and adds
+        zero extra compiles relative to a metrics-off sweep of the same
+        grid (pinned by tests/test_obs.py via ``obs.compile_log``).
     Returns:
       A ``SweepResult`` with one full ``History`` per point, in grid order.
     """
@@ -220,7 +227,7 @@ def run_sweep(grid: Union[ConfigGrid, Sequence[GridPoint]],
         t0 = time.perf_counter()
         group_hist = _run_group([points[i] for i in idxs], m, base_cfg,
                                 eps_static, group_task, num_iters,
-                                vectorize)
+                                vectorize, collect_metrics)
         elapsed += time.perf_counter() - t0
         for j, i in enumerate(idxs):
             histories[i] = jax.tree_util.tree_map(lambda x: x[j], group_hist)
@@ -231,7 +238,8 @@ def run_sweep(grid: Union[ConfigGrid, Sequence[GridPoint]],
 
 def _run_group(pts: list[GridPoint], m: int, base_cfg,
                eps_static: Optional[float], task: FedTask,
-               num_iters: int, vectorize: bool) -> History:
+               num_iters: int, vectorize: bool,
+               collect_metrics: bool = False) -> History:
     """Compile and execute one static partition; returns a stacked History.
 
     The task is closed over (program constants), matching ``simulator.run``
@@ -239,6 +247,8 @@ def _run_group(pts: list[GridPoint], m: int, base_cfg,
     point of the partition shares its quantize/seed/algo statics, so the
     representative ``pts[0]`` decides them.
     """
+    from ..obs import compile_log
+    compile_log.record("sweep", "partition")   # trace-time tick per program
     rep = pts[0]
     ftype = _float_dtype()
     pts_dev = (jnp.asarray([p.alpha for p in pts], ftype),
@@ -251,7 +261,8 @@ def _run_group(pts: list[GridPoint], m: int, base_cfg,
             eps1 = eps_static
         o = _point_optimizer(rep, m, base_cfg,
                              alpha=alpha, beta=beta, eps1=eps1)
-        return simulator.trajectory(o, task, num_iters)
+        return simulator.trajectory(o, task, num_iters,
+                                    collect_metrics=collect_metrics)
 
     if vectorize:
         program = jax.jit(jax.vmap(one_point))
@@ -316,6 +327,25 @@ class SweepResult:
         return np.asarray([h.final_state.comm.uplink_bytes_exact()
                            for h in self.histories], np.int64)
 
+    def metrics(self, i: int) -> dict:
+        """Point ``i``'s stacked ``{name: (K,) array}`` MetricBag series.
+
+        Empty unless the sweep ran with ``collect_metrics=True``.
+        """
+        bags = self.histories[i].metrics
+        return dict(bags) if bags else {}
+
+    def metrics_summary(self) -> list[dict]:
+        """One ``{name: final float}`` row per point (JSON-ready).
+
+        Final-round values: cumulative series (bytes, counts) read their
+        total; rate-like series read the last round. Empty dicts when the
+        sweep did not collect metrics.
+        """
+        from ..obs.metrics import summarize
+        return [summarize(self.metrics(i)) if self.metrics(i) else {}
+                for i in range(len(self.points))]
+
     def _fstar_for(self, fstar, i: int) -> float:
         if isinstance(fstar, dict):
             return float(fstar[self.points[i].seed])
@@ -379,6 +409,9 @@ class SweepResult:
         if include_trajectories:
             doc["objective"] = self.objective.tolist()
             doc["comm_cum"] = self.comm_cum.tolist()
+        summary = self.metrics_summary()
+        if any(summary):
+            doc["metrics"] = summary
         if fstar is not None and tol is not None:
             doc["frontier"] = self.frontier(fstar, tol)
         text = json.dumps(doc, indent=1, sort_keys=True)

@@ -34,7 +34,8 @@ def test_markdown_files_exist():
     names = {p.relative_to(REPO).as_posix() for p in files}
     for required in ("README.md", "docs/architecture.md",
                      "docs/paper_map.md", "docs/sweep_guide.md",
-                     "docs/opt_api.md", "docs/kernels.md"):
+                     "docs/opt_api.md", "docs/kernels.md",
+                     "docs/observability.md"):
         assert required in names, f"missing {required}"
 
 
@@ -100,6 +101,25 @@ def test_kernels_doc_code_executes():
     # the doc's headline objects came out right
     assert ns["spec"]["backend"] == "pallas"
     assert ns["res"].num_programs == 1
+
+
+def test_observability_doc_code_executes():
+    """Doc-sync: run every ```python block of docs/observability.md, in
+    order, in one shared namespace — the read-only/bit-exactness, stage
+    namespacing, zero-extra-compile, JSONL-schema, and BENCH-schema
+    claims are asserted inside the doc itself."""
+    guide = (REPO / "docs" / "observability.md").read_text()
+    blocks = _CODE_BLOCK_RE.findall(guide)
+    assert len(blocks) >= 7, "observability guide changed: update this"
+    ns = {"__name__": "observability_doc"}
+    for i, block in enumerate(blocks):
+        try:
+            exec(compile(block, f"observability.md[block {i}]", "exec"), ns)
+        except Exception as e:     # pragma: no cover - failure reporting
+            pytest.fail(f"observability.md code block {i} failed: {e!r}")
+    # the doc's headline objects came out right
+    assert ns["ev"]["event"] == "round"
+    assert "chb_step[reference]" in ns["hlo"]
 
 
 def test_sweep_guide_code_executes():

@@ -1,0 +1,135 @@
+"""Compare two BENCH_*.json artifacts and print regressions.
+
+  PYTHONPATH=src python tools/bench_diff.py OLD.json NEW.json [--tol-pct 25]
+
+Reads two ``repro.obs.bench`` artifacts (schema-validated on load) and
+reports, per benchmark:
+
+  * benchmarks that disappeared or newly fail;
+  * ``us_per_call`` slowdowns beyond ``--tol-pct`` (wall-clock is noisy —
+    default tolerance is generous; tighten it on quiet machines);
+  * measured HBM bytes (``measured_bytes``) growth beyond ``--tol-pct``
+    — the roofline accounting moving is a real program change, not noise;
+  * kernel retraces: any per-dispatch trace count that grew between
+    artifacts (``measured.*.kernel_traces``), which means a compile-cache
+    regression.
+
+Exit status 1 if any regression was found, 0 otherwise — usable directly
+as a CI gate between a checked-in baseline artifact and a fresh run.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.obs import bench  # noqa: E402
+
+
+def _us_per_call(payload: dict) -> float | None:
+    row = payload.get("row", "")
+    parts = row.split(",")
+    if len(parts) < 2:
+        return None
+    try:
+        return float(parts[1])
+    except ValueError:
+        return None
+
+
+def _trace_counts(payload: dict) -> dict[str, dict]:
+    """{backend: {dispatch: count}} where the payload recorded them."""
+    out = {}
+    measured = payload.get("measured")
+    if isinstance(measured, dict):
+        for be, rec in measured.items():
+            if isinstance(rec, dict) and \
+                    isinstance(rec.get("kernel_traces"), dict):
+                out[be] = rec["kernel_traces"]
+    return out
+
+
+def diff(old: dict, new: dict, tol_pct: float) -> list[str]:
+    """All regressions of ``new`` relative to ``old`` (empty = clean)."""
+    regressions: list[str] = []
+    old_b, new_b = old["benchmarks"], new["benchmarks"]
+
+    for name in sorted(old_b):
+        if name not in new_b:
+            if name in new.get("failed", []):
+                regressions.append(f"{name}: newly FAILING")
+            else:
+                regressions.append(f"{name}: missing from new artifact")
+            continue
+        op, np_ = old_b[name], new_b[name]
+
+        o_us, n_us = _us_per_call(op), _us_per_call(np_)
+        if o_us and n_us and o_us > 0 and n_us > o_us * (1 + tol_pct / 100):
+            regressions.append(
+                f"{name}: us_per_call {o_us:.1f} -> {n_us:.1f} "
+                f"(+{(n_us / o_us - 1) * 100:.0f}% > {tol_pct:g}%)")
+
+        o_bytes = op.get("measured_bytes") or {}
+        n_bytes = np_.get("measured_bytes") or {}
+        for be in sorted(set(o_bytes) & set(n_bytes)):
+            ob, nb = float(o_bytes[be]), float(n_bytes[be])
+            if ob > 0 and nb > ob * (1 + tol_pct / 100):
+                regressions.append(
+                    f"{name}: measured_bytes[{be}] {ob:.3g} -> {nb:.3g} "
+                    f"(+{(nb / ob - 1) * 100:.0f}% > {tol_pct:g}%)")
+
+        o_tr, n_tr = _trace_counts(op), _trace_counts(np_)
+        for be in sorted(set(o_tr) & set(n_tr)):
+            for k in sorted(set(o_tr[be]) | set(n_tr[be])):
+                ov, nv = o_tr[be].get(k, 0), n_tr[be].get(k, 0)
+                if nv > ov:
+                    regressions.append(
+                        f"{name}: retrace {be}/{k} {ov} -> {nv}")
+
+    for name in sorted(set(new.get("failed", [])) - set(old.get("failed",
+                                                                []))):
+        if f"{name}: newly FAILING" not in regressions:
+            regressions.append(f"{name}: newly FAILING")
+    return regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff two BENCH_*.json artifacts; exit 1 on regression")
+    ap.add_argument("old", help="baseline artifact")
+    ap.add_argument("new", help="candidate artifact")
+    ap.add_argument("--tol-pct", type=float, default=25.0,
+                    help="allowed growth in us_per_call / measured bytes "
+                         "before it counts as a regression (default 25)")
+    args = ap.parse_args(argv)
+
+    old = bench.load_artifact(args.old)
+    new = bench.load_artifact(args.new)
+    print(f"old: {args.old} ({len(old['benchmarks'])} benchmark(s), "
+          f"env {old['env']})")
+    print(f"new: {args.new} ({len(new['benchmarks'])} benchmark(s), "
+          f"env {new['env']})")
+    if old["env"] != new["env"]:
+        print("note: environments differ; wall-clock deltas may be noise")
+
+    regressions = diff(old, new, args.tol_pct)
+    both = sorted(set(old["benchmarks"]) & set(new["benchmarks"]))
+    for name in both:
+        o_us = _us_per_call(old["benchmarks"][name])
+        n_us = _us_per_call(new["benchmarks"][name])
+        if o_us is not None and n_us is not None:
+            print(f"  {name}: us_per_call {o_us:.1f} -> {n_us:.1f}")
+    if regressions:
+        print(f"\n{len(regressions)} regression(s):")
+        for r in regressions:
+            print(f"  REGRESSION {r}")
+        return 1
+    print("\nno regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,15 +1,20 @@
 """Recompile one dry-run case and print the largest collective/HBM ops
-(trip-count weighted) — the hillclimb microscope."""
+(trip-count weighted) — the hillclimb microscope.
+
+Thin CLI over ``repro.obs.hlo_report``: the call-graph walk, trip-count
+weighting, and per-op ranking live there (shared with tests and artifact
+writers); this script only builds the case and prints the tables."""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-import argparse, sys
-import jax
+import argparse
+import sys
+
 sys.path.insert(0, "src")
 from repro.configs import ARCHS
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import build_case
-from repro.launch import hlo_analysis as ha
 from repro.models import tuning
+from repro.obs import hlo_report
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--arch", required=True)
@@ -29,56 +34,7 @@ if args.shape == "train_4k":
     kw["moe_mode"] = args.moe_mode
 case = build_case(ARCHS[args.arch], args.shape, mesh, strategy="scan", **kw)
 with mesh:
-    hlo = jax.jit(case.fn, donate_argnums=case.donate).lower(*case.args)\
-        .compile().as_text()
+    hlo = hlo_report.compiled_text(case.fn, *case.args,
+                                   donate_argnums=case.donate)
 
-comps = ha.parse_module(hlo)
-entry = next(c for c in comps.values() if c.is_entry)
-edges = {c: [] for c in comps}
-for comp in comps.values():
-    for i in comp.instrs:
-        if i.opcode == "while":
-            bm = ha._BODY_RE.search(i.rest); cm = ha._COND_RE.search(i.rest)
-            trips = ha._trip_count(comps[cm.group(1)]) if cm else 1
-            if bm: edges[comp.name].append((bm.group(1), trips, True))
-            if cm: edges[comp.name].append((cm.group(1), trips, False))
-        else:
-            keeps = i.opcode in ("call", "conditional")
-            for callee in ha._CALLS_RE.findall(i.rest):
-                if callee in comps:
-                    edges[comp.name].append((callee, 1, keeps))
-order, seen = [], set()
-def topo(n):
-    if n in seen: return
-    seen.add(n)
-    for c, _, _ in edges[n]: topo(c)
-    order.append(n)
-topo(entry.name)
-mult = {c: 0.0 for c in comps}; mult[entry.name] = 1.0
-control = {entry.name}
-for name in reversed(order):
-    for callee, t, k in edges[name]:
-        mult[callee] += mult[name] * t
-        if name in control and k: control.add(callee)
-
-colls, hbms = [], []
-for cn, comp in comps.items():
-    m = mult[cn]
-    if m == 0: continue
-    sym = comp.symbol_table()
-    for i in comp.instrs:
-        for k in ha.COLLECTIVE_OPS:
-            if i.opcode in (k, k + "-start"):
-                w = 2 if k == "all-reduce" else 1
-                colls.append((m * w * ha.shape_bytes(i.result_type), m, k,
-                              i.result_type[:70], i.rest[:90]))
-        if cn in control and i.opcode not in ha._SKIP_BYTES_OPS and \
-                i.opcode != "while" and not i.opcode.endswith("-done"):
-            hbms.append((m * ha._instr_hbm_bytes(i, sym, comps), m,
-                         i.opcode, i.name[:40], i.result_type[:60]))
-print("== top collectives (bytes x trips) ==")
-for b, m, k, ty, rest in sorted(colls, reverse=True)[:args.top]:
-    print(f"{b/1e9:9.1f}GB m={m:7.0f} {k:18s} {ty}")
-print("== top HBM ops ==")
-for b, m, op, nm, ty in sorted(hbms, reverse=True)[:args.top]:
-    print(f"{b/1e9:9.1f}GB m={m:7.0f} {op:18s} {nm:40s} {ty}")
+print(hlo_report.format_report(hlo_report.report(hlo, top=args.top)))
