@@ -16,6 +16,8 @@ alone (``opt.from_spec(row["spec"])`` rebuilds the exact optimizer).
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 
 jax.config.update("jax_enable_x64", True)
@@ -28,6 +30,36 @@ from repro.core.simulator import (FedTask, comms_to_accuracy, estimate_fstar,
                                   iterations_to_accuracy)
 
 ALGOS = ["chb", "hb", "lag", "gd", "csgd"]
+
+# compressed-uplink variants: chb over each non-dense registry transport,
+# at task-scaled hyperparameters (see ``task_transport``)
+TRANSPORT_CURVES = ["chb_int8", "chb_topk", "chb_lowrank"]
+CURVES = ALGOS + TRANSPORT_CURVES
+
+
+def task_params_count(task: FedTask) -> int:
+    return int(sum(x.size for x in
+                   jax.tree_util.tree_leaves(task.init_params)))
+
+
+def task_transport(kind: str, task: FedTask):
+    """A task-scaled transport instance for the comparison curves.
+
+    top-k keeps ~40% of each worker's update (at least one entry) — on
+    the paper's ill-conditioned quadratics (L_m up to 1.3^16) EF top-k
+    at the paper step size diverges below ~36% density, so 40% is the
+    stable setting that still cuts uplink bytes (12-byte index+value
+    pairs vs 8 bytes/entry dense at f64). Low-rank uses the PowerSGD
+    rank-2 default. The instances go onto the sweep ``base_cfg`` and
+    survive the quantize axis intact (the engine reuses a base transport
+    whose ``mode`` matches the point's kind).
+    """
+    if kind == "topk":
+        return opt.make_transport(
+            "topk", k=max(1, (2 * task_params_count(task)) // 5))
+    if kind == "lowrank":
+        return opt.make_transport("lowrank", rank=2)
+    return opt.make_transport(kind)
 
 
 def csgd_tau0(task: FedTask) -> float:
@@ -71,14 +103,37 @@ def algo_points(alpha: float, m: int, beta: float = 0.4,
     return out
 
 
+def _curve(res, i, fstar, tol, us):
+    hist = res.history(i)
+    return {
+        "iters_to_tol": iterations_to_accuracy(hist, fstar, tol),
+        "comms_to_tol": comms_to_accuracy(hist, fstar, tol),
+        "total_comms": int(np.asarray(hist.comm_cum)[-1]),
+        "final_err": float(np.asarray(hist.objective)[-1] - fstar),
+        "final_gradsq": float(np.asarray(hist.agg_grad_sqnorm)[-1]),
+        "uplink_bytes": int(res.uplink_bytes[i]),
+        "us_per_iter": us,
+        "spec": res.specs[i],
+        "objective": np.asarray(hist.objective) - fstar,
+        "comm_cum": np.asarray(hist.comm_cum),
+        "mask": np.asarray(hist.mask),
+    }
+
+
 def compare_algorithms(bundle, num_iters: int, tol: float,
                        alpha: float | None = None, beta: float = 0.4,
-                       eps1_scale: float = 0.1, fstar_iters: int = 40000):
+                       eps1_scale: float = 0.1, fstar_iters: int = 40000,
+                       transports: tuple = ()):
     """Run all five algorithms as one sweep; return {algo: dict} with stats.
 
     Each algorithm's dict includes its full registry ``spec``
-    (``opt.from_spec``-able), so exported artifacts identify the exact
-    composition, not just a name.
+    (``opt.from_spec``-able) and its exact ``uplink_bytes``, so exported
+    artifacts identify the exact composition, not just a name.
+
+    ``transports`` adds compressed-chb curves (one per non-dense kind,
+    keyed ``chb_<kind>``) at task-scaled hyperparameters — each kind runs
+    as its own single-point sweep partition with the scaled transport on
+    the ``base_cfg``.
     """
     alpha = alpha if alpha is not None else bundle.alpha_paper
     m = bundle.L_m.shape[0]
@@ -90,38 +145,38 @@ def compare_algorithms(bundle, num_iters: int, tol: float,
     us = res.elapsed_s / (len(points) * num_iters) * 1e6
     out = {"fstar": fstar}
     for i, name in enumerate(points):
-        hist = res.history(i)
-        out[name] = {
-            "iters_to_tol": iterations_to_accuracy(hist, fstar, tol),
-            "comms_to_tol": comms_to_accuracy(hist, fstar, tol),
-            "total_comms": int(np.asarray(hist.comm_cum)[-1]),
-            "final_err": float(np.asarray(hist.objective)[-1] - fstar),
-            "final_gradsq": float(np.asarray(hist.agg_grad_sqnorm)[-1]),
-            "us_per_iter": us,
-            "spec": res.specs[i],
-            "objective": np.asarray(hist.objective) - fstar,
-            "comm_cum": np.asarray(hist.comm_cum),
-            "mask": np.asarray(hist.mask),
-        }
+        out[name] = _curve(res, i, fstar, tol, us)
+    chb = opt.make("chb", alpha, m, beta=beta, eps1_scale=eps1_scale)
+    for kind in transports:
+        base = dataclasses.replace(chb,
+                                   transport=task_transport(kind,
+                                                            bundle.task))
+        pt = sweep.GridPoint(alpha=chb.alpha, beta=chb.beta, eps1=chb.eps1,
+                             quantize=kind)
+        tres = sweep.run_sweep((pt,), task=bundle.task,
+                               num_iters=num_iters, base_cfg=base)
+        tus = tres.elapsed_s / num_iters * 1e6
+        out[f"chb_{kind}"] = _curve(tres, 0, fstar, tol, tus)
     return out
 
 
 def print_table(title: str, results: dict, metric_keys=("comms_to_tol",
                                                         "iters_to_tol")):
     print(f"\n== {title} ==")
-    hdr = "algo".ljust(6) + "".join(k.rjust(16) for k in metric_keys)
+    width = max(len(a) for a in CURVES) + 1
+    hdr = "algo".ljust(width) + "".join(k.rjust(16) for k in metric_keys)
     print(hdr)
-    for a in ALGOS:
+    for a in CURVES:
         if a not in results:
             continue
-        row = a.ljust(6) + "".join(
+        row = a.ljust(width) + "".join(
             str(results[a][k]).rjust(16) for k in metric_keys)
         print(row)
 
 
 def specs_payload(results: dict) -> dict:
-    """The {algo: registry spec} section for --json artifacts."""
-    return {a: results[a]["spec"] for a in ALGOS if a in results}
+    """The {curve: registry spec} section for --json artifacts."""
+    return {a: results[a]["spec"] for a in CURVES if a in results}
 
 
 def csv_row(name: str, results: dict, derived: str) -> str:

@@ -41,6 +41,7 @@ BENCH_NAMES = (
     "fig10_stepsize",
     "fig11_epsilon",
     "fig12_descent",
+    "transport_zoo",
     "serving",
     "roofline",
     "kernel_roofline",

@@ -1,0 +1,81 @@
+"""Transport zoo: uplink bytes-to-accuracy frontier across all registered
+transports — dense, int8, top-k, low-rank — for CHB on the paper's
+synthetic linear-regression task (the Fig. 2 setting).
+
+Each compressed curve is CHB with a task-scaled transport (see
+``common.task_transport``); "matched final loss" means first reaching the
+same objective-error tolerance as the dense run. Per-communication bytes
+come from the transport's exact ``payload_bytes`` accounting, so
+``bytes_to_tol = comms_to_tol * per_comm_bytes`` is exact, not estimated.
+
+``REPRO_BENCH_FAST=1`` shrinks the task and iteration count to a CI-smoke
+shape (same curves, same assertions, looser tolerance).
+"""
+import os
+
+from .common import compare_algorithms, csv_row, print_table, specs_payload
+from repro import opt
+from repro.data import paper_tasks
+
+TRANSPORT_KINDS = ("int8", "topk", "lowrank")
+
+
+def _frontier(res, bundle, tol):
+    """Per-curve byte-frontier rows, keyed by curve name."""
+    rows = {}
+    for name in ["chb"] + [f"chb_{k}" for k in TRANSPORT_KINDS]:
+        r = res[name]
+        o = opt.from_spec(r["spec"])
+        per_comm = o.transport.payload_bytes(bundle.task.init_params)
+        comms = r["comms_to_tol"]
+        rows[name] = {
+            "transport": r["spec"]["transport"],
+            "final_err": r["final_err"],
+            "comms_to_tol": comms,
+            "per_comm_bytes": per_comm,
+            "bytes_to_tol": None if comms is None else comms * per_comm,
+            "uplink_bytes_total": r["uplink_bytes"],
+            "tol": tol,
+        }
+    return rows
+
+
+def main():
+    fast = os.environ.get("REPRO_BENCH_FAST") == "1"
+    if fast:
+        bundle = paper_tasks.make_linear_regression(m=5, n_per=30, d=20,
+                                                    seed=0)
+        num_iters, tol, fstar_iters = 1500, 1e-4, 8000
+    else:
+        bundle = paper_tasks.make_linear_regression()
+        num_iters, tol, fstar_iters = 3000, 1e-4, 40000
+    res = compare_algorithms(bundle, num_iters=num_iters, tol=tol,
+                             fstar_iters=fstar_iters,
+                             transports=TRANSPORT_KINDS)
+    print_table(f"Transport zoo: linreg synthetic (tol {tol:g})", res,
+                metric_keys=("comms_to_tol", "final_err", "uplink_bytes"))
+    frontier = _frontier(res, bundle, tol)
+
+    # every curve converges (EF sparsification at the paper step size is
+    # only stable at the task-scaled densities common.task_transport picks)
+    for name, row in frontier.items():
+        assert row["final_err"] < 1e-2, (name, row["final_err"])
+        assert row["comms_to_tol"] is not None, name
+    # headline claim: at matched final loss, at least one compressed
+    # transport spends fewer uplink bytes than dense CHB
+    dense_bytes = frontier["chb"]["bytes_to_tol"]
+    best = min((k for k in TRANSPORT_KINDS),
+               key=lambda k: frontier[f"chb_{k}"]["bytes_to_tol"])
+    best_bytes = frontier[f"chb_{best}"]["bytes_to_tol"]
+    assert best_bytes < dense_bytes, (best, best_bytes, dense_bytes)
+
+    ratio = dense_bytes / best_bytes
+    row = csv_row("transport_zoo", res,
+                  f"dense_bytes={dense_bytes};best={best};"
+                  f"best_bytes={best_bytes};saving_x={ratio:.2f}")
+    return row, {"specs": specs_payload(res), "frontier": frontier,
+                 "tol": tol, "fast": fast}
+
+
+if __name__ == "__main__":
+    print(main()[0])

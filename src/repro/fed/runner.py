@@ -167,8 +167,8 @@ def _compile(opt: ComposedOptimizer, task: FedTask):
         else:
             dsq = tree_sqnorm(pending)   # f32 acc == delta_sqnorms row
         transmit = opt.censor.client_decide(rnd, worker, dsq, ssq)
-        payload = opt.transport.encode_row(pending)
-        new_err = opt.transport.feedback_row(pending, payload, err_row)
+        payload, aux = opt.transport.encode_row(pending, err_row)
+        new_err = opt.transport.feedback_row(pending, payload, aux, err_row)
         return payload, new_err, dsq, transmit
 
     def fold(ghat, payload, i):

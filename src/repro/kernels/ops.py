@@ -35,7 +35,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from . import censor, flash_attention, hb_update, quantize_ef, ref
+from . import (censor, flash_attention, hb_update, lowrank_ef, quantize_ef,
+               ref, topk_pack)
 from .common import interpret_default
 from ..obs import compile_log
 
@@ -171,6 +172,42 @@ def tree_int8_roundtrip_ef(pending, err, mask, *, block_rows: int = 256,
     payload = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
     new_err = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
     return payload, new_err
+
+
+@_dispatch
+def tree_topk_pack_ef(pending, err, keep, mask, *, block_rows: int = 256,
+                      interpret: bool | None = None):
+    """Fused per-worker top-k select/pack + error-feedback over a pytree.
+
+    ``keep`` holds the transport's 0/1 keep masks (exact host-graph
+    ``lax.top_k`` selections); per leaf ONE fused sweep emits the sparse
+    payload and the next error-feedback leaf together. Returns
+    ``(payload_tree, new_err_tree)``.
+    """
+    leaves_p, treedef = jax.tree_util.tree_flatten(pending)
+    leaves_e = treedef.flatten_up_to(err)
+    leaves_k = treedef.flatten_up_to(keep)
+    outs = [topk_pack.select_pack_ef_batched(
+        p, e, kp, mask, block_rows=block_rows, interpret=interpret)
+        for p, e, kp in zip(leaves_p, leaves_e, leaves_k)]
+    payload = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    new_err = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    return payload, new_err
+
+
+@_dispatch
+def tree_residual_ef(pending, payload, err, mask, *, block_rows: int = 256,
+                     interpret: bool | None = None):
+    """Fused masked error-feedback residual over a pytree.
+
+    Per leaf ONE sweep computes ``mk*(pending - payload) + (1-mk)*err``
+    (the low-rank transport's EF tail; its factor matmuls stay host-graph
+    jnp). Returns the new error-feedback tree.
+    """
+    return jax.tree_util.tree_map(
+        lambda p, q, e: lowrank_ef.residual_ef_batched(
+            p, q, e, mask, block_rows=block_rows, interpret=interpret),
+        pending, payload, err)
 
 
 @_dispatch

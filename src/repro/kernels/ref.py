@@ -86,6 +86,28 @@ def quantize_ef_batched(pending: jax.Array, err: jax.Array,
     return payload, new_err
 
 
+def select_pack_ef_batched(pending: jax.Array, err: jax.Array,
+                           keep: jax.Array, mask: jax.Array
+                           ) -> tuple[jax.Array, jax.Array]:
+    """(payload, new_err) of the fused top-k select/pack + EF sweep.
+
+    The payload is a ``where`` select (not a multiply — ``x * 0`` flips
+    negative zeros and would break bit-parity with the kernel)."""
+    payload = jnp.where(keep != 0, pending, jnp.zeros_like(pending))
+    mk = _bcast(mask, pending)
+    new_err = mk * (pending - payload) \
+        + (1.0 - mk) * err.astype(pending.dtype)
+    return payload, new_err
+
+
+def residual_ef_batched(pending: jax.Array, payload: jax.Array,
+                        err: jax.Array, mask: jax.Array) -> jax.Array:
+    """Masked EF residual: ``mk*(pending - payload) + (1-mk)*err``."""
+    mk = _bcast(mask, pending)
+    return mk * (pending - payload.astype(pending.dtype)) \
+        + (1.0 - mk) * err.astype(pending.dtype)
+
+
 def flash_attention_fwd(q, k, v, *, causal: bool = True,
                         window=None, scale=None):
     """Naive attention oracle; q (B,H,L,d), k/v (B,K,S,d)."""

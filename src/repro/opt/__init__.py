@@ -26,19 +26,22 @@ from .censor import (AdaptiveCensor, CensorPolicy, Eq8Censor, NeverCensor,
 from .compat import as_optimizer, from_config
 from .optimizer import BACKENDS, ComposedOptimizer
 from .registry import (CENSOR_KINDS, SERVER_KINDS, TRANSPORT_KINDS,
-                       from_spec, make, make_for_point, names, register,
-                       to_spec)
+                       from_spec, make, make_for_point, make_transport,
+                       names, register, to_spec, transport_names)
 from .server import GradientDescent, HeavyBall, ServerUpdate
-from .transport import DenseTransport, Int8Transport, Transport
+from .transport import (DenseTransport, Int8Transport, LowRankTransport,
+                        TopKTransport, Transport)
 
 __all__ = [
     "FedOptimizer", "OptState", "StepStats", "static_pos",
     "CensorPolicy", "NeverCensor", "Eq8Censor", "AdaptiveCensor",
     "StochasticCensor",
-    "Transport", "DenseTransport", "Int8Transport",
+    "Transport", "DenseTransport", "Int8Transport", "TopKTransport",
+    "LowRankTransport",
     "ServerUpdate", "GradientDescent", "HeavyBall",
     "ComposedOptimizer", "BACKENDS",
     "register", "make", "make_for_point", "names", "to_spec", "from_spec",
+    "make_transport", "transport_names",
     "CENSOR_KINDS", "TRANSPORT_KINDS", "SERVER_KINDS",
     "from_config", "as_optimizer",
 ]

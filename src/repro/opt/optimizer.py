@@ -24,7 +24,7 @@ from ..kernels import ops as kernel_ops
 from .api import OptState, StepStats, static_pos
 from .censor import CensorPolicy, Eq8Censor, NeverCensor
 from .server import GradientDescent, HeavyBall, ServerUpdate
-from .transport import (DenseTransport, Int8Transport, Transport, _bcast)
+from .transport import DenseTransport, Transport, _bcast
 
 BACKENDS = ("reference", "pallas")
 
@@ -62,9 +62,11 @@ class ComposedOptimizer:
         large tensors. Sub-f32 params (bf16/f16) instead upcast to f32
         inside the kernels — better accumulation than the reference's
         native-bf16 arithmetic, matching the ``ref.py`` oracles but NOT
-        the reference backend. Requires the built-in dense/int8
-        transports and gd/hb servers — custom stages have no fused path
-        and must run on the reference backend.
+        the reference backend. Requires a fusable transport (the
+        built-in dense / int8 / topk / lowrank, or any stateful
+        transport providing ``encode_feedback_pallas``) and gd/hb
+        servers — other custom stages have no fused path and must run
+        on the reference backend.
     """
 
     censor: CensorPolicy
@@ -81,14 +83,21 @@ class ComposedOptimizer:
                 f"unknown backend {self.backend!r}; valid: {BACKENDS}")
         if self.backend == "pallas":
             # the fused kernels implement the built-in stages only; a
-            # custom stage silently falling back would misreport what ran
-            if not isinstance(self.transport,
-                              (DenseTransport, Int8Transport)):
+            # custom stage silently falling back would misreport what ran.
+            # A stateful transport opts into the fused step by providing
+            # ``encode_feedback_pallas`` (int8/topk/lowrank do); stateless
+            # ones must be the dense passthrough (the fused path never
+            # calls their encode).
+            fusable = isinstance(self.transport, DenseTransport) or (
+                self.transport.stateful
+                and hasattr(self.transport, "encode_feedback_pallas"))
+            if not fusable:
                 raise TypeError(
                     "backend='pallas' fuses the built-in transports "
-                    "(dense | int8); custom transport "
-                    f"{type(self.transport).__name__} must run on the "
-                    "reference backend")
+                    "(dense | int8 | topk | lowrank) and stateful "
+                    "transports providing encode_feedback_pallas; custom "
+                    f"transport {type(self.transport).__name__} must run "
+                    "on the reference backend")
             if not isinstance(self.server, (GradientDescent, HeavyBall)):
                 raise TypeError(
                     "backend='pallas' fuses the built-in servers "
@@ -231,8 +240,9 @@ class ComposedOptimizer:
         ssq = step_sqnorm(params, state.prev_params)
         mask, new_censor = self.censor.decide(state.censor, dsq, ssq)
 
-        payload = self.transport.encode(pending)
-        new_err = self.transport.feedback(mask, pending, payload, state.err)
+        payload, aux = self.transport.encode(pending, state.err)
+        new_err = self.transport.feedback(mask, pending, payload, aux,
+                                          state.err)
         per_tx_bytes = self.transport.payload_bytes(params)
 
         # server/worker synchronized advance of the stale bank
@@ -267,8 +277,12 @@ class ComposedOptimizer:
             stacked bank (dense transports never materialize the delta
             tree at all);
           * bank advance: one fused ``ghat + mask * delta`` sweep;
-          * int8 transport: a per-worker abs-max reduction plus ONE fused
-            sweep emitting payload and error-feedback bank together;
+          * stateful transports: the transport's own
+            ``encode_feedback_pallas`` route — int8 runs a per-worker
+            abs-max reduction plus ONE fused sweep emitting payload and
+            error-feedback bank together; top-k packs its keep selection
+            and the EF update in one fused sweep; low-rank fuses the
+            residual/EF blend after its (jnp, MXU-bound) factor matmuls;
           * eq. (4): the one-sweep heavy-ball kernel with traced
             alpha/beta SMEM operands.
 
@@ -298,7 +312,7 @@ class ComposedOptimizer:
         mask, new_censor = self.censor.decide(state.censor, dsq, ssq)
 
         if quantized:
-            payload, new_err = kernel_ops.tree_int8_roundtrip_ef(
+            payload, new_err = self.transport.encode_feedback_pallas(
                 pending, state.err, mask)
             new_ghat = kernel_ops.tree_bank_advance(state.ghat, payload,
                                                     mask)

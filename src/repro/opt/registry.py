@@ -31,7 +31,8 @@ from .censor import (AdaptiveCensor, Eq8Censor, NeverCensor,
                      StochasticCensor)
 from .optimizer import ComposedOptimizer
 from .server import GradientDescent, HeavyBall
-from .transport import DenseTransport, Int8Transport
+from .transport import (DenseTransport, Int8Transport, LowRankTransport,
+                        TopKTransport, Transport)
 
 Builder = Callable[..., ComposedOptimizer]
 
@@ -47,6 +48,8 @@ CENSOR_KINDS: dict[str, type] = {
 TRANSPORT_KINDS: dict[str, type] = {
     "dense": DenseTransport,
     "int8": Int8Transport,
+    "topk": TopKTransport,
+    "lowrank": LowRankTransport,
 }
 SERVER_KINDS: dict[str, type] = {
     "gd": GradientDescent,
@@ -107,66 +110,119 @@ def make_for_point(name: str, alpha, num_workers: int, **hyper
     return fn(alpha, num_workers, **kw)
 
 
+def transport_names() -> tuple[str, ...]:
+    """The registered transport kinds, sorted (the ``quantize`` /
+    ``transport`` vocabulary of grids and builders)."""
+    return tuple(sorted(TRANSPORT_KINDS))
+
+
+def make_transport(kind: Optional[str], **hyper) -> Transport:
+    """Build a registered transport by kind.
+
+    Args:
+      kind: a ``TRANSPORT_KINDS`` key, or ``None`` for the dense
+        passthrough (legacy ``quantize=None``).
+      **hyper: transport hyperparameters (``k`` for topk, ``rank`` for
+        lowrank); passing one to a transport without that knob raises.
+    """
+    if kind is None:
+        kind = "dense"
+    if kind not in TRANSPORT_KINDS:
+        raise ValueError(f"unknown quantize mode {kind!r} "
+                         f"(expected None or one of {transport_names()})")
+    return TRANSPORT_KINDS[kind](**hyper)
+
+
 def _transport(quantize: Optional[str]):
-    if quantize is None:
-        return DenseTransport()
-    if quantize == "int8":
-        return Int8Transport()
-    raise ValueError(f"unknown quantize mode {quantize!r} "
-                     "(expected None or 'int8')")
+    return make_transport(quantize)
+
+
+def _resolve_transport(quantize, transport, k, rank) -> Transport:
+    """The transport a builder's keywords describe.
+
+    ``transport`` may be a kind string, a ready :class:`Transport`
+    instance (hyperparameters already bound, e.g. a task-scaled topk), or
+    ``None``; ``quantize`` is the legacy alias for the kind string. ``k``
+    and ``rank`` forward to the matching transport's constructor.
+    """
+    if transport is not None and not isinstance(transport, str):
+        if quantize is not None or k is not None or rank is not None:
+            raise ValueError(
+                "a Transport instance already binds its hyperparameters; "
+                "do not also pass quantize/k/rank")
+        return transport
+    kind = transport if transport is not None else quantize
+    if transport is not None and quantize is not None \
+            and transport != quantize:
+        raise ValueError(
+            f"conflicting transport={transport!r} and quantize={quantize!r} "
+            "(quantize is the legacy alias; pass one)")
+    hyper = {}
+    if k is not None:
+        hyper["k"] = k
+    if rank is not None:
+        hyper["rank"] = rank
+    return make_transport(kind, **hyper)
 
 
 # ------------------------------------------------------ built-in algorithms
 @register("gd")
-def _gd(alpha, num_workers, *, quantize=None, granularity="global",
-        bank_dtype=None, backend="reference") -> ComposedOptimizer:
+def _gd(alpha, num_workers, *, quantize=None, transport=None, k=None,
+        rank=None, granularity="global", bank_dtype=None,
+        backend="reference") -> ComposedOptimizer:
     """Classical distributed gradient descent (every worker transmits)."""
     return ComposedOptimizer(
-        censor=NeverCensor(), transport=_transport(quantize),
+        censor=NeverCensor(),
+        transport=_resolve_transport(quantize, transport, k, rank),
         server=GradientDescent(alpha), num_workers=num_workers,
         granularity=granularity, bank_dtype=bank_dtype, backend=backend)
 
 
 @register("hb")
-def _hb(alpha, num_workers, *, beta=0.4, quantize=None,
-        granularity="global", bank_dtype=None,
+def _hb(alpha, num_workers, *, beta=0.4, quantize=None, transport=None,
+        k=None, rank=None, granularity="global", bank_dtype=None,
         backend="reference") -> ComposedOptimizer:
     """Classical heavy ball (eq. 2); paper default beta=0.4."""
     return ComposedOptimizer(
-        censor=NeverCensor(), transport=_transport(quantize),
+        censor=NeverCensor(),
+        transport=_resolve_transport(quantize, transport, k, rank),
         server=HeavyBall(alpha, beta), num_workers=num_workers,
         granularity=granularity, bank_dtype=bank_dtype, backend=backend)
 
 
 @register("lag")
 def _lag(alpha, num_workers, *, eps1=None, eps1_scale=0.1, quantize=None,
-         granularity="global", bank_dtype=None,
-         backend="reference") -> ComposedOptimizer:
+         transport=None, k=None, rank=None, granularity="global",
+         bank_dtype=None, backend="reference") -> ComposedOptimizer:
     """Censoring-based GD (LAG-WK, ref. [54]) with the shared eq. (8)."""
     if eps1 is None:
         eps1 = paper_eps1(alpha, num_workers, eps1_scale)
     return ComposedOptimizer(
-        censor=Eq8Censor(eps1), transport=_transport(quantize),
+        censor=Eq8Censor(eps1),
+        transport=_resolve_transport(quantize, transport, k, rank),
         server=GradientDescent(alpha), num_workers=num_workers,
         granularity=granularity, bank_dtype=bank_dtype, backend=backend)
 
 
 @register("chb")
 def _chb(alpha, num_workers, *, beta=0.4, eps1=None, eps1_scale=0.1,
-         quantize=None, granularity="global", bank_dtype=None,
+         quantize=None, transport=None, k=None, rank=None,
+         granularity="global", bank_dtype=None,
          backend="reference") -> ComposedOptimizer:
     """The paper's algorithm with its Sec.-IV default constants."""
     if eps1 is None:
         eps1 = paper_eps1(alpha, num_workers, eps1_scale)
     return ComposedOptimizer(
-        censor=Eq8Censor(eps1), transport=_transport(quantize),
+        censor=Eq8Censor(eps1),
+        transport=_resolve_transport(quantize, transport, k, rank),
         server=HeavyBall(alpha, beta), num_workers=num_workers,
         granularity=granularity, bank_dtype=bank_dtype, backend=backend)
 
 
 @register("csgd")
 def _csgd(alpha, num_workers, *, tau0=None, decay=0.99, eps1=None, seed=0,
-          quantize=None, granularity="global", bank_dtype=None,
+          quantize=None, transport=None, k=None, rank=None,
+          granularity="global", bank_dtype=None,
           backend="reference") -> ComposedOptimizer:
     """CSGD-style stochastically censored GD (Li et al., arXiv:1909.03631).
 
@@ -180,7 +236,8 @@ def _csgd(alpha, num_workers, *, tau0=None, decay=0.99, eps1=None, seed=0,
         tau0 = eps1 if eps1 is not None else 0.0
     return ComposedOptimizer(
         censor=StochasticCensor(tau0=tau0, decay=decay, seed=seed),
-        transport=_transport(quantize), server=GradientDescent(alpha),
+        transport=_resolve_transport(quantize, transport, k, rank),
+        server=GradientDescent(alpha),
         num_workers=num_workers, granularity=granularity,
         bank_dtype=bank_dtype, backend=backend)
 

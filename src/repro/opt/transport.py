@@ -5,19 +5,39 @@
     techniques such as quantization"): symmetric per-tensor int8 with a
     per-worker scale and error feedback, so worker and server views never
     diverge (see ``core/quantize.py``).
+  * :class:`TopKTransport` — per-leaf magnitude top-k sparsification
+    (index + value packing on the wire) with the same error-feedback
+    bank as int8.
+  * :class:`LowRankTransport` — PowerSGD-style rank-r power-iteration
+    compression (arXiv:1905.13727 idiom; see also the compressed-adaptive
+    family of arXiv:2109.05109) with warm-started factors carried in the
+    transport state next to the error-feedback bank.
 
 Like the censor policies, every transport exposes a batched interface
 (leading-M stacked pytrees, used by the composed step) and a row interface
 (one worker's slice, used by the event-driven ``repro.fed`` runtime). The
-two are built from the same quantizer so they agree bit-for-bit.
+two are built from the same per-slice math so they agree bit-for-bit.
 
-``stateful`` tells the host whether the error-feedback bank exists — a
-*structural* property (it sizes state buffers), so it is a class variable,
-never traced.
+``stateful`` tells the host whether transport state (the error-feedback
+bank, plus any warm-started factors) exists — a *structural* property (it
+sizes state buffers), so it is a class variable, never traced.
+
+Stage anatomy of one step (both batched and row):
+
+    pending = prepare(delta, err)              # fold in the EF residual
+    payload, aux = encode(pending, err)        # what the receiver gets
+    new_err = feedback(mask, pending, payload, aux, err)
+
+``aux`` is encode-internal state handed to ``feedback`` (the low-rank
+transport's refreshed factors); stateless encodes return ``()``. A
+stateful transport additionally implements ``encode_feedback_pallas`` —
+the fused-kernel route the ``backend="pallas"`` composed step dispatches
+to (see ``docs/transport_zoo.md`` for the exactness contracts).
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, ClassVar, Optional, Protocol, runtime_checkable
 
 import jax
@@ -34,50 +54,79 @@ def _bcast(mask: jax.Array, leaf: jax.Array) -> jax.Array:
     return mask.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
 
 
+def _ef_blend(mask, pending, payload, err):
+    """Masked error-feedback bank update, leaf-wise over pytrees.
+
+    Transmitted workers keep the fresh residual ``pending - payload``;
+    censored workers keep their old residual. The arithmetic-blend form
+    ``mk*new + (1-mk)*old`` is shared by the reference path, the fused
+    kernels, and (at mask=1) the row path's plain ``pending - payload`` —
+    which is what keeps all three bit-aligned.
+    """
+    return jax.tree_util.tree_map(
+        lambda p, q, e: _bcast(mask, p) * (p - q)
+        + (1.0 - _bcast(mask, p)) * e.astype(p.dtype),
+        pending, payload, err)
+
+
 @runtime_checkable
 class Transport(Protocol):
     """Pluggable stage encoding transmitted deltas (+ error feedback)."""
 
-    mode: ClassVar[Optional[str]]   # config token: None | "int8"
-    stateful: ClassVar[bool]        # does the error-feedback bank exist?
+    mode: ClassVar[Optional[str]]   # config token: None | a TRANSPORT_KINDS key
+    stateful: ClassVar[bool]        # does transport state (EF bank &co) exist?
+    #: True when ``payload + new_err == pending`` holds *bitwise* after a
+    #: transmit (int8 / top-k: the residual subtraction is exact by a
+    #: Sterbenz-style argument; low-rank payloads are arbitrary floats, so
+    #: the subtraction rounds). Conformance tests key off this.
+    exact_residual: ClassVar[bool] = False
 
     def init(self, params, num_workers: int) -> Any:
-        """Error-feedback state (lives in ``OptState.err``)."""
+        """Transport state (lives in ``OptState.err``)."""
         ...
 
     def prepare(self, delta, err):
         """Batched: fold the error-feedback residual into the delta."""
         ...
 
-    def encode(self, pending):
-        """Batched: the payload the receiver reconstructs."""
+    def encode(self, pending, err):
+        """Batched: ``(payload, aux)`` — what the receiver reconstructs,
+        plus encode-internal state for ``feedback`` (``()`` if none)."""
         ...
 
-    def feedback(self, mask, pending, payload, err):
-        """Batched: next error-feedback state given the transmit mask."""
+    def feedback(self, mask, pending, payload, aux, err):
+        """Batched: next transport state given the transmit mask."""
         ...
 
     def prepare_row(self, delta, err_row):
         """One worker's ``prepare`` (event runtime)."""
         ...
 
-    def encode_row(self, pending):
-        """One worker's ``encode`` (event runtime)."""
+    def encode_row(self, pending, err_row):
+        """One worker's ``encode`` (event runtime); returns (payload, aux)."""
         ...
 
-    def feedback_row(self, pending, payload, err_row):
-        """One worker's post-transmit error residual (event runtime)."""
+    def feedback_row(self, pending, payload, aux, err_row):
+        """One worker's post-transmit state (event runtime; only applied
+        when the upload is actually delivered)."""
         ...
 
     def payload_bytes(self, params) -> int:
         """Static uplink bytes for one transmission of this pytree."""
         ...
 
+    def ef_bank(self, err):
+        """The error-feedback bank inside the transport state (``None``
+        for stateless transports). The conformance suite's telescoping
+        checks read the bank through this, so transports are free to
+        carry extra state (e.g. low-rank factors) next to it."""
+        ...
+
     def metrics(self, err) -> dict:
         """Optional ``repro.obs`` hook: stage-local scalar observables.
 
-        Called with the transport's error-feedback state after each step;
-        keys are namespaced ``transport/<kind>/<key>``. Must be read-only.
+        Called with the transport's state after each step; keys are
+        namespaced ``transport/<kind>/<key>``. Must be read-only.
         """
         ...
 
@@ -88,6 +137,7 @@ class DenseTransport:
 
     mode: ClassVar[Optional[str]] = None
     stateful: ClassVar[bool] = False
+    exact_residual: ClassVar[bool] = True   # payload == pending, err empty
 
     def init(self, params, num_workers: int):
         # empty leaves keep the state pytree structure stable across
@@ -98,23 +148,26 @@ class DenseTransport:
     def prepare(self, delta, err):
         return delta
 
-    def encode(self, pending):
-        return pending
+    def encode(self, pending, err):
+        return pending, ()
 
-    def feedback(self, mask, pending, payload, err):
+    def feedback(self, mask, pending, payload, aux, err):
         return err
 
     def prepare_row(self, delta, err_row):
         return delta
 
-    def encode_row(self, pending):
-        return pending
+    def encode_row(self, pending, err_row):
+        return pending, ()
 
-    def feedback_row(self, pending, payload, err_row):
+    def feedback_row(self, pending, payload, aux, err_row):
         return err_row
 
     def payload_bytes(self, params) -> int:
         return payload_bytes_dense(params)
+
+    def ef_bank(self, err):
+        return None
 
     def metrics(self, err) -> dict:
         return {}
@@ -126,6 +179,7 @@ class Int8Transport:
 
     mode: ClassVar[Optional[str]] = "int8"
     stateful: ClassVar[bool] = True
+    exact_residual: ClassVar[bool] = True
 
     def init(self, params, num_workers: int):
         return tree_stack_zeros(params, num_workers)
@@ -134,34 +188,319 @@ class Int8Transport:
         return jax.tree_util.tree_map(
             lambda d, e: jnp.add(d, e.astype(d.dtype)), delta, err)
 
-    def encode(self, pending):
+    def encode(self, pending, err):
         # per-worker scales: worker m quantizes its own delta slice
-        return tree_quantize_roundtrip_per_worker(pending)
+        return tree_quantize_roundtrip_per_worker(pending), ()
 
-    def feedback(self, mask, pending, payload, err):
-        return jax.tree_util.tree_map(
-            lambda p, q, e: _bcast(mask, p) * (p - q)
-            + (1.0 - _bcast(mask, p)) * e.astype(p.dtype),
-            pending, payload,
-            jax.tree_util.tree_map(
-                lambda e, p: e.astype(p.dtype), err, pending))
+    def feedback(self, mask, pending, payload, aux, err):
+        return _ef_blend(mask, pending, payload, err)
+
+    def encode_feedback_pallas(self, pending, err, mask):
+        """Fused route for the pallas composed step: one abs-max reduction
+        plus one sweep emitting payload and new EF bank together."""
+        from ..kernels import ops as kernel_ops
+        return kernel_ops.tree_int8_roundtrip_ef(pending, err, mask)
 
     def prepare_row(self, delta, err_row):
         return jax.tree_util.tree_map(
             lambda d, e: d + e.astype(d.dtype), delta, err_row)
 
-    def encode_row(self, pending):
-        return tree_quantize_roundtrip(pending)
+    def encode_row(self, pending, err_row):
+        return tree_quantize_roundtrip(pending), ()
 
-    def feedback_row(self, pending, payload, err_row):
+    def feedback_row(self, pending, payload, aux, err_row):
         return jax.tree_util.tree_map(
             lambda p, q: p - q, pending, payload)
 
     def payload_bytes(self, params) -> int:
         return payload_bytes_int8(params)
 
+    def ef_bank(self, err):
+        return err
+
     def metrics(self, err) -> dict:
         # ||EF bank||^2: how much un-transmitted quantization residual the
         # cohort is carrying (an extra read-sweep; metrics are opt-in)
         from ..core.util import tree_sqnorm
         return {"ef_residual_sqnorm": tree_sqnorm(err)}
+
+
+# ------------------------------------------------------------------ top-k
+def _keep_mask_slice(x: jax.Array, k: int) -> jax.Array:
+    """Dense 0/1 keep mask of one worker's leaf: the ``min(k, size)``
+    largest-|x| entries (``lax.top_k`` tie-break: lowest flat index wins,
+    deterministically — the row and batched entry points agree draw-exact).
+    """
+    flat = x.reshape(-1)
+    kk = min(int(k), flat.shape[0])
+    _, idx = jax.lax.top_k(jnp.abs(flat), kk)
+    keep = jnp.zeros_like(flat).at[idx].set(jnp.ones((kk,), flat.dtype))
+    return keep.reshape(x.shape)
+
+
+def tree_topk_keep(pending, k: int):
+    """Per-worker keep masks of a leading-M stacked pytree (vmapped —
+    selection and scatter are exact, so batching cannot perturb them)."""
+    return jax.tree_util.tree_map(
+        lambda x: jax.vmap(lambda s: _keep_mask_slice(s, k))(x), pending)
+
+
+def tree_topk_keep_row(pending_row, k: int):
+    """One worker's keep masks (the ``repro.fed`` entry point)."""
+    return jax.tree_util.tree_map(
+        lambda x: _keep_mask_slice(x, k), pending_row)
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKTransport:
+    """Top-k sparsified uplinks with error feedback (index+value packing).
+
+    Each worker ships, per parameter leaf, the ``min(k, leaf.size)``
+    largest-magnitude entries of its pending delta as (index, value)
+    pairs — ``k * (4 + itemsize)`` bytes per leaf (a 4-byte index plus one
+    native-dtype value per kept entry). The receiver reconstructs the
+    dense leaf with zeros elsewhere; the un-shipped mass goes into the
+    same error-feedback bank the int8 transport uses, so nothing is ever
+    lost, only deferred.
+    """
+
+    mode: ClassVar[Optional[str]] = "topk"
+    stateful: ClassVar[bool] = True
+    exact_residual: ClassVar[bool] = True   # residual is x or 0, elementwise
+
+    k: int = 64
+
+    def init(self, params, num_workers: int):
+        return tree_stack_zeros(params, num_workers)
+
+    def prepare(self, delta, err):
+        return jax.tree_util.tree_map(
+            lambda d, e: jnp.add(d, e.astype(d.dtype)), delta, err)
+
+    def encode(self, pending, err):
+        keep = tree_topk_keep(pending, self.k)
+        payload = jax.tree_util.tree_map(
+            lambda p, kp: jnp.where(kp != 0, p, jnp.zeros_like(p)),
+            pending, keep)
+        return payload, ()
+
+    def feedback(self, mask, pending, payload, aux, err):
+        return _ef_blend(mask, pending, payload, err)
+
+    def encode_feedback_pallas(self, pending, err, mask):
+        """Fused route: the keep masks are exact jnp selections; ONE fused
+        sweep per leaf then emits payload and new EF bank together
+        (``kernels/topk_pack.py``, the ``quantize_ef`` idiom)."""
+        from ..kernels import ops as kernel_ops
+        keep = tree_topk_keep(pending, self.k)
+        return kernel_ops.tree_topk_pack_ef(pending, err, keep, mask)
+
+    def prepare_row(self, delta, err_row):
+        return jax.tree_util.tree_map(
+            lambda d, e: d + e.astype(d.dtype), delta, err_row)
+
+    def encode_row(self, pending, err_row):
+        keep = tree_topk_keep_row(pending, self.k)
+        payload = jax.tree_util.tree_map(
+            lambda p, kp: jnp.where(kp != 0, p, jnp.zeros_like(p)),
+            pending, keep)
+        return payload, ()
+
+    def feedback_row(self, pending, payload, aux, err_row):
+        return jax.tree_util.tree_map(
+            lambda p, q: p - q, pending, payload)
+
+    def payload_bytes(self, params) -> int:
+        # exact per-transmission accounting: min(k, size) kept entries per
+        # leaf, each a 4-byte index + one native-dtype value
+        total = 0
+        for x in jax.tree_util.tree_leaves(params):
+            total += min(int(self.k), x.size) * (4 + x.dtype.itemsize)
+        return total
+
+    def ef_bank(self, err):
+        return err
+
+    def metrics(self, err) -> dict:
+        from ..core.util import tree_sqnorm
+        return {"ef_residual_sqnorm": tree_sqnorm(err)}
+
+
+# ---------------------------------------------------------------- low-rank
+def _orthonormalize(p: jax.Array) -> jax.Array:
+    """Modified Gram-Schmidt on the columns of ``p`` (r, rank).
+
+    Explicit column loop (static rank) instead of ``jnp.linalg.qr`` so the
+    row and batched entry points trace the *same* subgraph — vmapped QR
+    lowers differently and would break the draw-exact row contract. Zero
+    columns pass through unnormalized (guarded divide), never NaN.
+    """
+    cols = []
+    for j in range(p.shape[1]):
+        v = p[:, j]
+        for u in cols:
+            v = v - jnp.dot(u, v) * u
+        nrm = jnp.sqrt(jnp.sum(v * v))
+        cols.append(v / jnp.where(nrm > 0, nrm, jnp.ones_like(nrm)))
+    return jnp.stack(cols, axis=1)
+
+
+def _power_iter_slice(mat: jax.Array, q: jax.Array
+                      ) -> tuple[jax.Array, jax.Array]:
+    """One PowerSGD step on one worker's matrixized leaf.
+
+    ``mat`` (r, c), ``q`` (c, rank): P = orthonormalize(mat @ q),
+    Q' = mat^T P; the wire carries (P, Q') and the receiver reconstructs
+    ``P @ Q'^T``. Returns (reconstruction, Q') — Q' warm-starts the next
+    round's iteration from the transport state.
+    """
+    p = _orthonormalize(mat @ q)
+    q_new = mat.T @ p
+    return p @ q_new.T, q_new
+
+
+def _matrixize(x: jax.Array) -> jax.Array:
+    """One worker's leaf as (shape[0], prod(rest)) — PowerSGD's view."""
+    return x.reshape(x.shape[0], -1)
+
+
+@dataclasses.dataclass(frozen=True)
+class LowRankTransport:
+    """PowerSGD-style rank-r uplinks with warm-started factors + EF.
+
+    Matrix-shaped leaves (ndim >= 2, viewed as ``(shape[0], prod(rest))``)
+    are compressed to one power-iteration step of rank
+    ``min(rank, rows, cols)``: the wire carries the two factors
+    (``rank*(rows+cols)`` values instead of ``rows*cols``). Vector leaves
+    (biases, 1-d params) ship dense — factoring them saves nothing. The
+    right factor Q warm-starts the next round (it lives in the transport
+    state next to the error-feedback bank, advancing only on transmitted
+    rounds, exactly like the bank), so repeated rounds converge toward the
+    delta's true top-r subspace. The approximation error goes into the
+    standard EF bank.
+
+    The factor math is plain jnp shared verbatim by both backends; the
+    pallas route fuses only the elementwise residual/EF sweep
+    (``kernels/lowrank_ef.py``) — the matmuls already run on the MXU.
+    """
+
+    mode: ClassVar[Optional[str]] = "lowrank"
+    stateful: ClassVar[bool] = True
+    exact_residual: ClassVar[bool] = False  # P@Q^T is an arbitrary float
+
+    rank: int = 2
+
+    # -- structure helpers (static, shape-driven) --
+    def _rank_eff(self, leaf_shape: tuple) -> int:
+        r = leaf_shape[0]
+        c = math.prod(leaf_shape[1:])
+        return min(int(self.rank), r, c)
+
+    def _q_init_slice(self, leaf: jax.Array) -> jax.Array:
+        """Deterministic warm-start: the first rank_eff canonical basis
+        vectors of the column space (no RNG in transport state)."""
+        if leaf.ndim < 2:
+            return jnp.zeros((0,), leaf.dtype)
+        c = math.prod(leaf.shape[1:])
+        return jnp.eye(c, self._rank_eff(leaf.shape), dtype=leaf.dtype)
+
+    def init(self, params, num_workers: int):
+        err = tree_stack_zeros(params, num_workers)
+        q = jax.tree_util.tree_map(
+            lambda x: jnp.tile(self._q_init_slice(x),
+                               (num_workers,) + (1,) * max(
+                                   1, self._q_init_slice(x).ndim)),
+            params)
+        return {"err": err, "q": q}
+
+    def prepare(self, delta, err):
+        return jax.tree_util.tree_map(
+            lambda d, e: jnp.add(d, e.astype(d.dtype)), delta, err["err"])
+
+    def _encode_slice(self, x: jax.Array, q: jax.Array
+                      ) -> tuple[jax.Array, jax.Array]:
+        """One worker's (payload, new_q) for one leaf."""
+        if q.shape[-1] == 0:            # vector leaf: dense passthrough
+            return x, q
+        recon, q_new = _power_iter_slice(_matrixize(x), q)
+        return recon.reshape(x.shape), q_new
+
+    def encode(self, pending, err):
+        # explicit python loop over the static worker axis: each worker
+        # slice runs the exact subgraph the row entry point runs, so the
+        # fed runtime's per-client encodes are draw-exact vs the batched
+        # step (vmapped matmul/orthonormalization would drift by ulps)
+        def leaf(p, q):
+            outs = [self._encode_slice(p[i], q[i])
+                    for i in range(p.shape[0])]
+            return (jnp.stack([o[0] for o in outs]),
+                    jnp.stack([o[1] for o in outs]))
+        leaves_p, treedef = jax.tree_util.tree_flatten(pending)
+        leaves_q = treedef.flatten_up_to(err["q"])
+        outs = [leaf(p, q) for p, q in zip(leaves_p, leaves_q)]
+        payload = jax.tree_util.tree_unflatten(treedef,
+                                               [o[0] for o in outs])
+        q_new = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+        return payload, q_new
+
+    def feedback(self, mask, pending, payload, aux, err):
+        new_err = _ef_blend(mask, pending, payload, err["err"])
+        new_q = jax.tree_util.tree_map(
+            lambda qn, qo: _bcast(mask, qn) * qn
+            + (1.0 - _bcast(mask, qn)) * qo.astype(qn.dtype),
+            aux, err["q"])
+        return {"err": new_err, "q": new_q}
+
+    def encode_feedback_pallas(self, pending, err, mask):
+        """Fused route: factor matmuls are the shared jnp helpers (bit-
+        identical to the reference by construction); ONE fused sweep per
+        leaf then computes the EF residual blend
+        (``kernels/lowrank_ef.py``)."""
+        from ..kernels import ops as kernel_ops
+        payload, q_new = self.encode(pending, err)
+        new_err = kernel_ops.tree_residual_ef(pending, payload,
+                                              err["err"], mask)
+        new_q = jax.tree_util.tree_map(
+            lambda qn, qo: _bcast(mask, qn) * qn
+            + (1.0 - _bcast(mask, qn)) * qo.astype(qn.dtype),
+            q_new, err["q"])
+        return payload, {"err": new_err, "q": new_q}
+
+    def prepare_row(self, delta, err_row):
+        return jax.tree_util.tree_map(
+            lambda d, e: d + e.astype(d.dtype), delta, err_row["err"])
+
+    def encode_row(self, pending, err_row):
+        leaves_p, treedef = jax.tree_util.tree_flatten(pending)
+        leaves_q = treedef.flatten_up_to(err_row["q"])
+        outs = [self._encode_slice(p, q)
+                for p, q in zip(leaves_p, leaves_q)]
+        payload = jax.tree_util.tree_unflatten(treedef,
+                                               [o[0] for o in outs])
+        q_new = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+        return payload, q_new
+
+    def feedback_row(self, pending, payload, aux, err_row):
+        new_err = jax.tree_util.tree_map(
+            lambda p, q: p - q, pending, payload)
+        return {"err": new_err, "q": aux}
+
+    def payload_bytes(self, params) -> int:
+        # matrix leaves ship the two factors; vector leaves ship dense
+        total = 0
+        for x in jax.tree_util.tree_leaves(params):
+            if x.ndim >= 2:
+                r = x.shape[0]
+                c = math.prod(x.shape[1:])
+                total += self._rank_eff(x.shape) * (r + c) * x.dtype.itemsize
+            else:
+                total += x.size * x.dtype.itemsize
+        return total
+
+    def ef_bank(self, err):
+        return err["err"]
+
+    def metrics(self, err) -> dict:
+        from ..core.util import tree_sqnorm
+        return {"ef_residual_sqnorm": tree_sqnorm(err["err"]),
+                "factor_sqnorm": tree_sqnorm(err["q"])}

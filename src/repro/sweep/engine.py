@@ -109,8 +109,14 @@ def _point_optimizer(p: GridPoint, m: int, base_cfg,
             kw["eps1"] = eps1
         return opt_mod.make_for_point(p.algo, alpha, m, **kw)
     base = _base_optimizer(base_cfg, m)
-    o = dataclasses.replace(base, num_workers=m,
-                            transport=_transport(p.quantize))
+    # reuse the template's transport when it already is the point's kind —
+    # this is what lets a task-scaled instance (e.g. TopKTransport(k=...))
+    # survive the sweep instead of being clobbered by kind defaults
+    if getattr(base.transport, "mode", None) == p.quantize:
+        transport = base.transport
+    else:
+        transport = _transport(p.quantize)
+    o = dataclasses.replace(base, num_workers=m, transport=transport)
     return o.with_hparams(alpha=alpha, beta=beta, eps1=eps1)
 
 

@@ -44,7 +44,9 @@ class GridPoint(NamedTuple):
       seed: task PRNG seed — selects which stacked task instance the point
         runs on (data generation happens host-side in the task factory);
         also forwarded to seeded censor policies of named algorithms.
-      quantize: ``None`` or ``"int8"`` (static axis).
+      quantize: ``None`` or a registered transport kind
+        (``opt.transport_names()``: dense/int8/topk/lowrank) at its
+        default hyperparameters (static axis).
       num_workers: M, or ``None`` to inherit the task's worker count.
       algo: ``None`` for the default eq.-(8)/heavy-ball continuum (gd, hb,
         lag, chb are all points of it), or a ``repro.opt`` registry name —
@@ -89,7 +91,8 @@ class ConfigGrid:
       eps1_scale: relative thresholds (mutually exclusive with ``eps1``).
       seed: task-generation seeds; more than one seed requires a
         ``task_factory`` at ``run_sweep`` time.
-      quantize: quantization modes (``None`` | ``"int8"``), a static axis.
+      quantize: transport kinds (``None`` or ``opt.transport_names()``
+        entries), a static axis.
       num_workers: worker counts, a static axis; ``(None,)`` inherits the
         task's M.
     """
@@ -106,9 +109,11 @@ class ConfigGrid:
             raise ValueError("give eps1 or eps1_scale, not both")
         if not self.alpha:
             raise ValueError("alpha axis must have at least one value")
+        from ..opt.registry import TRANSPORT_KINDS, transport_names
         for q in self.quantize:
-            if q not in (None, "int8"):
-                raise ValueError(f"unknown quantize mode {q!r}")
+            if q is not None and q not in TRANSPORT_KINDS:
+                raise ValueError(f"unknown quantize mode {q!r} (expected "
+                                 f"None or one of {transport_names()})")
 
     @property
     def num_points(self) -> int:

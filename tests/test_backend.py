@@ -85,6 +85,22 @@ GOLDEN_CHB_F32 = ("0x1.107a260000000p+6", "0x1.0024fc0000000p+12",
                   262, 262, "0x1.dc40000000000p-42",
                   "0x1.a94328858133cp+1")
 
+# Per-transport golden pins for the same run, at conformance-scale
+# hyperparameters (k=8 actually sparsifies the d=20 task; lowrank ships
+# vector leaves dense, so its trajectory — deliberately — equals the
+# dense pin). A transport registered without an entry here FAILS
+# ``test_golden_fingerprints_all_transports`` loudly instead of going
+# uncovered.
+GOLDEN_TRANSPORT_KW = {"topk": {"k": 8}, "lowrank": {"rank": 2}}
+GOLDEN_TRANSPORT_F32 = {
+    "dense": GOLDEN_CHB_F32,
+    "int8": ("0x1.107a260000000p+6", "0x1.00251e0000000p+12", 259, 259,
+             "0x1.7e80000000000p-41", "0x1.a94328064f2b5p+1"),
+    "topk": ("0x1.107a280000000p+6", "0x1.0075ec0000000p+12", 295, 295,
+             "0x1.baecd80000000p-13", "0x1.a943cf7d37977p+1"),
+    "lowrank": GOLDEN_CHB_F32,
+}
+
 
 # ------------------------------------------------------- simulator parity
 @pytest.mark.parametrize("name,kw", [
@@ -114,6 +130,23 @@ def test_golden_fingerprints_both_backends(linreg, task32):
         o = opt.make("chb", linreg.alpha_paper, M, backend=backend)
         got = _fingerprint(simulator.run(o, task32, ITERS))
         assert got == GOLDEN_CHB_F32, (backend, got)
+
+
+@pytest.mark.parametrize("kind", sorted(opt.TRANSPORT_KINDS))
+def test_golden_fingerprints_all_transports(linreg, task32, kind):
+    """Every registered transport has a golden pin, reproduced bit-for-bit
+    by BOTH backends. A new registry entry without a pin fails the first
+    assert — record one instead of shipping an uncovered transport."""
+    assert kind in GOLDEN_TRANSPORT_F32, (
+        f"transport {kind!r} is registered but has no golden fingerprint; "
+        "add a GOLDEN_TRANSPORT_F32 entry (and GOLDEN_TRANSPORT_KW "
+        "hyperparameters if the defaults are a no-op on the d=20 task)")
+    t = opt.make_transport(kind, **GOLDEN_TRANSPORT_KW.get(kind, {}))
+    for backend in opt.BACKENDS:
+        o = opt.make("chb", linreg.alpha_paper, M, transport=t,
+                     backend=backend)
+        got = _fingerprint(simulator.run(o, task32, ITERS))
+        assert got == GOLDEN_TRANSPORT_F32[kind], (kind, backend, got)
 
 
 def test_pytree_task_bitwise(linreg):

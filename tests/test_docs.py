@@ -35,7 +35,7 @@ def test_markdown_files_exist():
     for required in ("README.md", "docs/architecture.md",
                      "docs/paper_map.md", "docs/sweep_guide.md",
                      "docs/opt_api.md", "docs/kernels.md",
-                     "docs/observability.md"):
+                     "docs/observability.md", "docs/transport_zoo.md"):
         assert required in names, f"missing {required}"
 
 
@@ -101,6 +101,25 @@ def test_kernels_doc_code_executes():
     # the doc's headline objects came out right
     assert ns["spec"]["backend"] == "pallas"
     assert ns["res"].num_programs == 1
+
+
+def test_transport_zoo_doc_code_executes():
+    """Doc-sync: run every ```python block of docs/transport_zoo.md, in
+    order, in one shared namespace — the spec round-trip, EF telescoping,
+    byte-accounting, warm-start, backend bit-identity, and sweep-survival
+    contracts are asserted inside the doc itself."""
+    guide = (REPO / "docs" / "transport_zoo.md").read_text()
+    blocks = _CODE_BLOCK_RE.findall(guide)
+    assert len(blocks) >= 6, "transport zoo guide changed: update this"
+    ns = {"__name__": "transport_zoo_doc"}
+    for i, block in enumerate(blocks):
+        try:
+            exec(compile(block, f"transport_zoo.md[block {i}]", "exec"), ns)
+        except Exception as e:     # pragma: no cover - failure reporting
+            pytest.fail(f"transport_zoo.md code block {i} failed: {e!r}")
+    # the doc's headline objects came out right
+    assert ns["spec"]["transport"] == {"kind": "topk", "k": 8}
+    assert int(ns["res"].uplink_bytes[1]) < int(ns["res"].uplink_bytes[0])
 
 
 def test_observability_doc_code_executes():
