@@ -48,6 +48,7 @@ import numpy as np
 
 from ..core.censoring import step_sqnorm
 from ..core.quantize import payload_bytes_dense
+from ..lint import draw_exact
 from ..core.simulator import FedTask, global_loss
 from ..core.util import (tree_sqnorm, tree_sum_leading, tree_worker_slice)
 from ..kernels import ops as kernel_ops
@@ -192,6 +193,7 @@ def _compile(opt: ComposedOptimizer, task: FedTask):
             loss)
 
 
+@draw_exact
 def run_edge(cfg, task: FedTask, edge: EdgeConfig,
              num_rounds: int, *, collect_metrics: bool = False,
              runlog=None) -> EdgeHistory:
@@ -278,7 +280,7 @@ def run_edge(cfg, task: FedTask, edge: EdgeConfig,
     def dispatch_cohort() -> list[int]:
         """Sample idle+available clients; pushes their finish events."""
         nonlocal t
-        for attempt in range(100_000):
+        for _attempt in range(100_000):
             cands = [i for i in range(m) if idle[i]
                      and prof[i].is_available(t, rng)]
             cohort = edge.population.sample_cohort(cands, rng)

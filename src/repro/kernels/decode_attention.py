@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .common import resolve_interpret
+
 _NEG = -1e30
 
 
@@ -57,7 +59,7 @@ def _kernel(scale, bc, nc, g,
 
 def decode_attention_pallas(q, k_cache, v_cache, cache_pos, pos, *,
                             scale=None, block: int = 512,
-                            interpret: bool = True) -> jax.Array:
+                            interpret: bool | None = None) -> jax.Array:
     """q: (B, H, d); caches: (B, K, C, d); cache_pos: (C,) abs positions
     (-1 empty); pos: () current position. Returns (B, H, d)."""
     b, h, d = q.shape
@@ -92,7 +94,7 @@ def decode_attention_pallas(q, k_cache, v_cache, cache_pos, pos, *,
             pltpu.VMEM((g,), jnp.float32),
             pltpu.VMEM((g,), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q4, k_cache, v_cache, pos_arr, cpos)
     return out.reshape(b, h, d)
 

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .common import resolve_interpret
+
 _NEG = -1e30
 
 
@@ -70,7 +72,7 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
                            window: int | None = None,
                            scale: float | None = None,
                            q_block: int = 512, kv_block: int = 512,
-                           interpret: bool = True) -> jax.Array:
+                           interpret: bool | None = None) -> jax.Array:
     """q: (B, H, Lq, d); k, v: (B, K, S, d); returns (B, H, Lq, d)."""
     b, h, lq, d = q.shape
     kh, s_len = k.shape[1], k.shape[2]
@@ -103,5 +105,5 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
             pltpu.VMEM((bq,), jnp.float32),
             pltpu.VMEM((bq,), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q, k, v)

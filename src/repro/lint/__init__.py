@@ -1,0 +1,37 @@
+"""repro-lint: repo-aware static analysis for the exactness invariants.
+
+CHB's censoring decision (eq. 8) is a threshold comparison: a single-ulp
+drift or a flipped ``-0.0`` can change a transmit/suppress decision and
+silently break the bit-exactness anchors the whole suite is pinned on.
+This package turns the repo's postmortems (static-hparam retraces,
+mask-multiply sign loss, float byte-counter overflow, vmap ulp drift,
+silent interpret mode, unpinned registry kinds, unseeded RNG) into an
+AST-based lint pass that fails CI before the bug lands.
+
+CLI::
+
+    python -m repro.lint [--json] [--select R1,R2] [--ignore R1] paths...
+    python -m repro.lint --list-rules
+
+Suppressions are inline, per-rule, and must carry a reason::
+
+    x = keep * v  # repro-lint: disable=mask-multiply-select -- <why safe>
+
+Public API: :func:`run_paths` (lint and get findings), :func:`draw_exact`
+(marker decorator for the ``vmap-in-draw-exact`` rule), and the registry
+(:func:`rule_names`, :func:`rule_docs`) mirroring the ``repro.opt`` idiom.
+See docs/lint.md for the rule catalog.
+"""
+from .engine import LintContext, collect_files, find_root, run_paths
+from .findings import (SCHEMA, Finding, load_artifact, make_artifact,
+                       write_artifact)
+from .markers import draw_exact
+from .registry import docs as rule_docs
+from .registry import names as rule_names
+from .registry import project_rule, rule
+
+__all__ = [
+    "SCHEMA", "Finding", "LintContext", "collect_files", "draw_exact",
+    "find_root", "load_artifact", "make_artifact", "project_rule", "rule",
+    "rule_docs", "rule_names", "run_paths", "write_artifact",
+]

@@ -1,0 +1,13 @@
+"""``python -m repro.lint`` entry point."""
+import sys
+
+from .cli import main
+
+try:
+    code = main()
+    sys.stdout.flush()
+except BrokenPipeError:
+    # downstream pipe (e.g. `| head`) closed early; not a lint failure
+    sys.stderr.close()
+    code = 0
+raise SystemExit(code)

@@ -1,0 +1,85 @@
+"""CLI driver: ``python -m repro.lint [options] paths...``.
+
+Exit status: 0 clean (every finding suppressed-with-reason or none at
+all), 1 when unsuppressed findings exist, 2 on usage errors — the same
+contract as ``benchmarks/run.py --only`` / ``tools/bench_diff.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from . import registry
+from .engine import run_paths
+from .findings import make_artifact, write_artifact
+
+
+def _list_rules() -> str:
+    lines = ["repro-lint rules (select/ignore/suppress by name):", ""]
+    for name, doc in registry.docs().items():
+        lines.append(f"  {name}")
+        lines.append(f"      {doc}")
+    lines += ["", "suppression syntax (reason is required):",
+              "  # repro-lint: disable=<rule>[,<rule>] -- <reason>",
+              "  # repro-lint: disable-file=<rule> -- <reason>"]
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.lint",
+        description="repo-aware static analysis for the exactness "
+                    "invariants (rule catalog: docs/lint.md)")
+    ap.add_argument("paths", nargs="*",
+                    help="files and/or directories to lint")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the findings artifact as JSON on stdout "
+                         "instead of human-readable lines")
+    ap.add_argument("--json-file", metavar="PATH",
+                    help="also write the findings artifact to PATH")
+    ap.add_argument("--select", metavar="RULES",
+                    help="comma-separated rule names to run (default all)")
+    ap.add_argument("--ignore", metavar="RULES",
+                    help="comma-separated rule names to skip")
+    ap.add_argument("--root", metavar="DIR",
+                    help="project root override (default: nearest "
+                         "pyproject.toml above the first path)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        print(_list_rules())
+        return 0
+    if not args.paths:
+        ap.print_usage(sys.stderr)
+        print("error: no paths given (try: python -m repro.lint src "
+              "benchmarks tests)", file=sys.stderr)
+        return 2
+
+    try:
+        findings = run_paths(args.paths, root=args.root,
+                             select=args.select, ignore=args.ignore)
+    except ValueError as e:          # unknown rule names, etc.
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    active = [f for f in findings if not f.suppressed]
+    suppressed = [f for f in findings if f.suppressed]
+    artifact = make_artifact(
+        findings, rules=sorted(registry.resolve_selection(
+            args.select, args.ignore)), paths=args.paths)
+    if args.json_file:
+        write_artifact(artifact, args.json_file)
+    if args.json:
+        write_artifact(artifact, None)
+    else:
+        for f in findings:
+            print(f.render())
+        print(f"{len(active)} finding(s), {len(suppressed)} "
+              f"suppressed-with-reason")
+    return 1 if active else 0
+
+
+if __name__ == "__main__":          # pragma: no cover - module entry
+    raise SystemExit(main())

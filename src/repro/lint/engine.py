@@ -1,0 +1,207 @@
+"""Collection + execution: files in, findings out.
+
+The engine parses each file once (AST + parent links + suppression
+comments), hands the parse to every selected per-file rule, then runs the
+project rules over the whole file set. Suppressions are applied last, so a
+rule never needs to know about them.
+
+Fixture hygiene: directory walks skip ``lint_fixtures`` directories (they
+hold deliberately-bad snippets for tests/test_lint.py) along with caches;
+explicitly-named files are always linted, which is how the fixture tests
+lint the bad snippets on purpose.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Iterable, Optional
+
+from . import registry, suppress
+from .findings import Finding
+
+_SKIP_DIRS = {"__pycache__", ".git", ".pytest_cache", ".ruff_cache",
+              "node_modules", ".claude", "lint_fixtures"}
+
+
+@dataclasses.dataclass
+class SourceFile:
+    """One parsed source file, shared by every rule."""
+    path: str                       # as reported in findings (relative)
+    abspath: str
+    text: str
+    tree: Optional[ast.AST]         # None when the file does not parse
+    parents: dict                   # ast node -> parent node
+
+    def walk(self):
+        if self.tree is None:
+            return
+        yield from ast.walk(self.tree)
+
+    def parent(self, node, levels: int = 1):
+        for _ in range(levels):
+            node = self.parents.get(node)
+            if node is None:
+                return None
+        return node
+
+
+@dataclasses.dataclass
+class LintContext:
+    """Everything the rules can see.
+
+    Attributes:
+      root: project root (auto-detected from a ``pyproject.toml``); rules
+        that cross-check repo files (``registry-kind-unpinned``,
+        ``baked-traced-hparam``'s kernel-signature table) resolve paths
+        against it.
+      files: every collected ``SourceFile``, in deterministic order.
+    """
+    root: str
+    files: list = dataclasses.field(default_factory=list)
+    _cache: dict = dataclasses.field(default_factory=dict)
+
+    def read_project_file(self, relpath: str) -> Optional[ast.Module]:
+        """Parse ``root``-relative ``relpath`` (cached); None if absent."""
+        if relpath in self._cache:
+            return self._cache[relpath]
+        full = os.path.join(self.root, relpath)
+        tree = None
+        if os.path.isfile(full):
+            try:
+                with open(full) as fh:
+                    tree = ast.parse(fh.read(), filename=full)
+            except SyntaxError:
+                tree = None
+        self._cache[relpath] = tree
+        return tree
+
+    def project_glob(self, reldir: str) -> list[str]:
+        """``root``-relative paths of the ``.py`` files under ``reldir``."""
+        base = os.path.join(self.root, reldir)
+        if not os.path.isdir(base):
+            return []
+        out = []
+        for name in sorted(os.listdir(base)):
+            if name.endswith(".py"):
+                out.append(os.path.join(reldir, name))
+        return out
+
+
+def find_root(start: str) -> str:
+    """Nearest ancestor of ``start`` holding a pyproject.toml (else start)."""
+    cur = os.path.abspath(start)
+    if os.path.isfile(cur):
+        cur = os.path.dirname(cur)
+    probe = cur
+    while True:
+        if os.path.isfile(os.path.join(probe, "pyproject.toml")):
+            return probe
+        parent = os.path.dirname(probe)
+        if parent == probe:
+            return cur
+        probe = parent
+
+
+def collect_files(paths: Iterable[str]) -> list[str]:
+    """Expand files/directories into a sorted, de-duplicated .py file list."""
+    out: list[str] = []
+    seen: set[str] = set()
+
+    def add(p: str) -> None:
+        a = os.path.abspath(p)
+        if a not in seen:
+            seen.add(a)
+            out.append(p)
+
+    for p in paths:
+        if os.path.isdir(p):
+            for dirpath, dirnames, filenames in os.walk(p):
+                dirnames[:] = sorted(d for d in dirnames
+                                     if d not in _SKIP_DIRS)
+                for fn in sorted(filenames):
+                    if fn.endswith(".py"):
+                        add(os.path.join(dirpath, fn))
+        elif p.endswith(".py") or os.path.isfile(p):
+            add(p)
+    return out
+
+
+def _parse(path: str, root: str) -> tuple[SourceFile, Optional[Finding]]:
+    with open(path, encoding="utf-8") as fh:
+        text = fh.read()
+    rel = os.path.relpath(os.path.abspath(path), root)
+    rel = path if rel.startswith("..") else rel
+    try:
+        tree = ast.parse(text, filename=path)
+    except SyntaxError as e:
+        src = SourceFile(path=rel, abspath=os.path.abspath(path),
+                         text=text, tree=None, parents={})
+        return src, Finding(rule="parse-error", path=rel,
+                            line=e.lineno or 1, col=e.offset or 0,
+                            message=f"syntax error: {e.msg}")
+    parents: dict = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    return SourceFile(path=rel, abspath=os.path.abspath(path), text=text,
+                      tree=tree, parents=parents), None
+
+
+def run_paths(paths: Iterable[str], *, root: Optional[str] = None,
+              select: Optional[str] = None, ignore: Optional[str] = None
+              ) -> list[Finding]:
+    """Lint ``paths``; returns every finding (suppressed ones marked).
+
+    Args:
+      paths: files and/or directories (directories are walked for .py).
+      root: project root override; default auto-detects via pyproject.toml.
+      select/ignore: comma-separated rule names (see ``registry``).
+    """
+    from . import rules as _rules  # noqa: F401  (registers the rule set)
+    file_list = collect_files(paths)
+    if root is None:
+        root = find_root(file_list[0] if file_list else os.getcwd())
+    selected = registry.resolve_selection(select, ignore)
+    known = set(registry.names())
+
+    ctx = LintContext(root=os.path.abspath(root))
+    findings: list[Finding] = []
+    per_file: list[tuple[SourceFile, list[Finding]]] = []
+
+    for path in file_list:
+        src, parse_finding = _parse(path, ctx.root)
+        ctx.files.append(src)
+        file_findings: list[Finding] = []
+        if parse_finding is not None:
+            if "parse-error" in selected:
+                file_findings.append(parse_finding)
+        else:
+            for name, fn in registry.file_rules(selected):
+                file_findings.extend(fn(ctx, src))
+        per_file.append((src, file_findings))
+
+    project_findings: list[Finding] = []
+    for name, fn in registry.project_rules(selected):
+        project_findings.extend(fn(ctx))
+
+    # attach project findings to their file's suppression table when the
+    # file was part of this run; else they pass through unsuppressable
+    by_path = {src.path: i for i, (src, _) in enumerate(per_file)}
+    leftovers: list[Finding] = []
+    for f in project_findings:
+        i = by_path.get(f.path)
+        if i is None:
+            leftovers.append(f)
+        else:
+            per_file[i][1].append(f)
+
+    for src, file_findings in per_file:
+        sups, metas = suppress.parse(src.path, src.text, known)
+        covered = suppress.apply(file_findings, sups)
+        findings.extend(covered)
+        findings.extend(m for m in metas if m.rule in selected
+                        or m.rule in suppress.META_RULES)
+    findings.extend(leftovers)
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return findings

@@ -1,0 +1,105 @@
+"""Finding record + the JSON findings-artifact schema.
+
+The artifact mirrors the ``repro.obs.bench`` idiom: schema-versioned JSON
+with enough context to be diffed across commits (``tools/lint_diff.py``)
+without the working tree that produced it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+from typing import Optional
+
+SCHEMA = "repro-lint-findings/v1"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one source location.
+
+    Attributes:
+      rule: registry name of the rule that fired (``repro.lint --list-rules``).
+      path: file path, relative to the lint root when under it.
+      line: 1-based source line of the offending node.
+      col: 0-based column offset.
+      message: human-readable description, specific to the call site.
+      suppressed: True when an inline ``# repro-lint: disable=`` comment
+        (with a reason) covers this finding; suppressed findings are
+        reported in the artifact but do not fail the run.
+      reason: the suppression's written reason (suppressed findings only).
+    """
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+    suppressed: bool = False
+    reason: Optional[str] = None
+
+    def key(self) -> tuple:
+        """Identity for cross-artifact diffing: line numbers shift under
+        unrelated edits, so the key is (rule, path, message)."""
+        return (self.rule, self.path, self.message)
+
+    def to_dict(self) -> dict:
+        d = {"rule": self.rule, "path": self.path, "line": self.line,
+             "col": self.col, "message": self.message}
+        if self.suppressed:
+            d["suppressed"] = True
+            d["reason"] = self.reason
+        return d
+
+    def render(self) -> str:
+        tag = " [suppressed: {}]".format(self.reason) if self.suppressed \
+            else ""
+        return f"{self.path}:{self.line}:{self.col}: " \
+               f"{self.rule}: {self.message}{tag}"
+
+
+def make_artifact(findings: list, *, rules: list, paths: list) -> dict:
+    """The JSON findings artifact for a finished run."""
+    active = [f for f in findings if not f.suppressed]
+    suppressed = [f for f in findings if f.suppressed]
+    return {
+        "schema": SCHEMA,
+        "argv_paths": list(paths),
+        "rules": sorted(rules),
+        "counts": {
+            "findings": len(active),
+            "suppressed": len(suppressed),
+            "by_rule": _by_rule(active),
+        },
+        "findings": [f.to_dict() for f in active],
+        "suppressed": [f.to_dict() for f in suppressed],
+    }
+
+
+def _by_rule(findings: list) -> dict:
+    out: dict[str, int] = {}
+    for f in findings:
+        out[f.rule] = out.get(f.rule, 0) + 1
+    return dict(sorted(out.items()))
+
+
+def load_artifact(path: str) -> dict:
+    """Load + schema-check a findings artifact (lint_diff's entry point)."""
+    with open(path) as fh:
+        data = json.load(fh)
+    if data.get("schema") != SCHEMA:
+        raise ValueError(
+            f"{path}: not a {SCHEMA} artifact "
+            f"(schema={data.get('schema')!r})")
+    for k in ("findings", "suppressed", "counts"):
+        if k not in data:
+            raise ValueError(f"{path}: artifact missing key {k!r}")
+    return data
+
+
+def write_artifact(artifact: dict, path: Optional[str]) -> None:
+    text = json.dumps(artifact, indent=2, sort_keys=True)
+    if path is None or path == "-":
+        sys.stdout.write(text + "\n")
+    else:
+        with open(path, "w") as fh:
+            fh.write(text + "\n")

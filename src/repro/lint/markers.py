@@ -1,0 +1,36 @@
+"""Source markers the lint rules key on.
+
+This module is intentionally dependency-free (stdlib only, no jax): hot-path
+modules (``sweep/engine.py``, ``fed/runner.py``, ``opt/transport.py``) import
+it at module load, so it must never pull the analysis engine — or anything
+heavier — into the import graph.
+"""
+from __future__ import annotations
+
+from typing import Callable, TypeVar
+
+F = TypeVar("F", bound=Callable)
+
+
+def draw_exact(fn: F) -> F:
+    """Mark a function as a draw-exact path.
+
+    Draw-exact paths are the ones the bit-exactness anchors are pinned on:
+    the same computation run per-row (one client, one grid point) and
+    batched must produce *bit-identical* values, so a censor threshold
+    comparison (eq. 8) lands on the same side either way. ``jax.vmap`` and
+    gather-style batching regroup float reductions and change XLA's matmul
+    lowering by ~1 ulp — enough to flip a transmit/suppress decision near
+    the threshold — so the ``vmap-in-draw-exact`` lint rule forbids them
+    inside marked functions (``lax.map`` and explicit per-slice loops are
+    the compliant batching forms; see docs/lint.md).
+
+    Runtime behavior is untouched: the decorator only sets an attribute.
+    """
+    fn.__draw_exact__ = True
+    return fn
+
+
+#: Assign ``__draw_exact__ = True`` at module top level to mark a whole
+#: module as a draw-exact path (every function in it is then checked).
+MODULE_MARKER = "__draw_exact__"

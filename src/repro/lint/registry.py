@@ -1,0 +1,96 @@
+"""String-keyed rule registry (the ``repro.opt`` registry idiom).
+
+A *file rule* checks one parsed source file; a *project rule* checks
+cross-file invariants (it runs once per lint invocation and sees the whole
+file set plus the project root). Both register under a kebab-case name that
+is the vocabulary of ``--select`` / ``--ignore`` and of inline
+``# repro-lint: disable=<name>`` suppressions.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable
+
+from .suppress import META_RULES
+
+# name -> (checker, one-line doc). File rules take (ctx, src) and yield
+# findings; project rules take (ctx) and yield findings.
+_FILE_RULES: dict[str, tuple[Callable, str]] = {}
+_PROJECT_RULES: dict[str, tuple[Callable, str]] = {}
+
+
+def ensure_loaded() -> None:
+    """Import the built-in rule modules (idempotent).
+
+    Rules live in ``repro.lint.rules`` and register themselves on import;
+    deferring that import keeps ``registry`` free of cycles while letting
+    ``names()``/``docs()`` always reflect the full catalog.
+    """
+    from . import rules  # noqa: F401  (import side effect registers rules)
+
+
+def rule(name: str, doc: str) -> Callable:
+    """Decorator: register a per-file rule under ``name``."""
+    def deco(fn: Callable) -> Callable:
+        if name in _FILE_RULES or name in _PROJECT_RULES:
+            raise ValueError(f"duplicate lint rule {name!r}")
+        _FILE_RULES[name] = (fn, doc)
+        return fn
+    return deco
+
+
+def project_rule(name: str, doc: str) -> Callable:
+    """Decorator: register a whole-project rule under ``name``."""
+    def deco(fn: Callable) -> Callable:
+        if name in _FILE_RULES or name in _PROJECT_RULES:
+            raise ValueError(f"duplicate lint rule {name!r}")
+        _PROJECT_RULES[name] = (fn, doc)
+        return fn
+    return deco
+
+
+def names() -> tuple[str, ...]:
+    """Every selectable rule name, sorted (meta-rules included)."""
+    ensure_loaded()
+    return tuple(sorted({**_FILE_RULES, **_PROJECT_RULES,
+                         **{k: None for k in META_RULES}}))
+
+
+def docs() -> dict[str, str]:
+    """name -> one-line doc for ``--list-rules``."""
+    ensure_loaded()
+    out = {n: d for n, (_, d) in _FILE_RULES.items()}
+    out.update({n: d for n, (_, d) in _PROJECT_RULES.items()})
+    out.update(META_RULES)
+    return dict(sorted(out.items()))
+
+
+def file_rules(selected: Iterable[str]) -> list[tuple[str, Callable]]:
+    return [(n, fn) for n, (fn, _) in sorted(_FILE_RULES.items())
+            if n in selected]
+
+
+def project_rules(selected: Iterable[str]) -> list[tuple[str, Callable]]:
+    return [(n, fn) for n, (fn, _) in sorted(_PROJECT_RULES.items())
+            if n in selected]
+
+
+def resolve_selection(select: str | None, ignore: str | None
+                      ) -> set[str]:
+    """The active rule set from ``--select`` / ``--ignore`` comma lists.
+
+    Unknown names raise with the valid list — the same contract as
+    ``opt.make`` and ``benchmarks/run.py --only``.
+    """
+    all_names = set(names())
+
+    def split(arg: str | None) -> set[str]:
+        vals = {v.strip() for v in (arg or "").split(",") if v.strip()}
+        unknown = sorted(vals - all_names)
+        if unknown:
+            listing = "\n".join(f"  {n}" for n in sorted(all_names))
+            raise ValueError(
+                f"unknown rule(s) {unknown}; valid rules:\n{listing}")
+        return vals
+
+    chosen = split(select) or all_names
+    return chosen - split(ignore)

@@ -1,0 +1,10 @@
+"""Rule set: importing this package registers every built-in rule.
+
+Each module encodes one hard-won repo invariant (the historical bug that
+motivated it is documented in the module docstring and docs/lint.md).
+"""
+from . import (counters, draw_exact, hparams, interpret, masks,
+               randomness, registry_pins)
+
+__all__ = ["counters", "draw_exact", "hparams", "interpret", "masks",
+           "randomness", "registry_pins"]

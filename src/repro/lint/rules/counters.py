@@ -1,0 +1,78 @@
+"""Rule ``float-byte-counter`` — the PR 1 byte-overflow bug class.
+
+History: the seed carried cumulative uplink bytes in a float32 cell.  Past
+2^24 accumulated bytes (~16 MiB) float32 spacing exceeds 1, so small
+payload increments silently stopped registering — the bytes curve went
+flat while transmissions kept happening. PR 1 replaced it with the split
+int32 (whole-MiB, remainder-bytes) pair in ``core/accounting.py``, exact to
+2 PiB on any backend.
+
+The rule flags byte-counter *state* being created or accumulated in a
+float dtype: an assignment (or augmented assignment) whose target is
+byte-named and whose right-hand side mentions a float dtype
+(``jnp.float32`` & co, or ``.astype(float)``). Derived float *views* for
+reporting (a property returning ``mib * MIB + rem`` as float) are fine —
+they are reads of exact integer state, not the state itself — and the rule
+only looks at assignments, so it does not fire on them.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..asthelpers import ident_tokens, terminal_name
+from ..findings import Finding
+from ..registry import rule
+
+_BYTE_WORDS = {"bytes", "nbytes"}
+_FLOAT_DTYPES = {"float32", "float64", "float16", "bfloat16"}
+
+
+def _byte_named(target: ast.expr) -> str | None:
+    name = terminal_name(target)
+    if name is not None and (ident_tokens(name) & _BYTE_WORDS):
+        return name
+    return None
+
+
+def _float_marker(tree: ast.AST) -> str | None:
+    """A float-dtype mention inside an expression, if any."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute) and node.attr in _FLOAT_DTYPES:
+            return node.attr
+        if isinstance(node, ast.Call):
+            fn = terminal_name(node.func)
+            if fn == "astype" and any(
+                    isinstance(a, ast.Name) and a.id == "float"
+                    for a in node.args):
+                return "float"
+    return None
+
+
+@rule("float-byte-counter",
+      "byte/comm counters must not be created or accumulated in a float "
+      "dtype (float32 loses byte-resolution past 2^24); use the split "
+      "int32 (MiB, remainder) idiom from core/accounting.py")
+def check(ctx, src):
+    for node in src.walk():
+        if isinstance(node, ast.AugAssign):
+            targets, value = [node.target], node.value
+        elif isinstance(node, ast.Assign):
+            targets, value = node.targets, node.value
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets, value = [node.target], node.value
+        else:
+            continue
+        for t in targets:
+            name = _byte_named(t)
+            if name is None:
+                continue
+            marker = _float_marker(value)
+            if marker is None:
+                continue
+            yield Finding(
+                rule="float-byte-counter", path=src.path,
+                line=node.lineno, col=node.col_offset,
+                message=f"byte counter {name!r} built/accumulated via "
+                        f"{marker}: float cells lose byte increments past "
+                        "2^24; carry split int32 (MiB, remainder) counters "
+                        "with carry_bytes (core/accounting.py)")

@@ -1,0 +1,95 @@
+"""Rule ``vmap-in-draw-exact`` — the PR 2 ulp-drift bug class.
+
+History: the sweep engine's first draft batched grid points with
+``jax.vmap``; the batched gemms lower differently and drifted from
+per-point ``simulator.run`` by ~1 ulp per iteration — enough to flip an
+f32 censor decision near the eq.-(8) threshold and break the bit-exactness
+anchor. The shipped engine maps points with ``lax.map`` (same per-point
+subgraph, bit-identical) and offers ``vectorize=True`` as a *documented*
+inexact opt-in. The low-rank transport later hit the same wall (vmapped
+QR/orthonormalization) and uses explicit per-worker loops instead.
+
+Functions marked ``@repro.lint.draw_exact`` (or modules setting
+``__draw_exact__ = True``) carry that contract. Inside them the rule
+forbids the batching forms known to drift:
+
+  * ``jax.vmap`` (regroups reductions / relowers gemms);
+  * gather-style batching: ``jnp.take``, ``jnp.take_along_axis``,
+    ``jax.lax.gather`` (stacked-bank gathers perturb matmul lowering).
+
+``lax.map`` and explicit per-slice Python loops are the compliant forms.
+A deliberate exception (e.g. the engine's ``vectorize=True`` branch)
+carries an inline suppression with its reason.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..asthelpers import dotted, terminal_name
+from ..findings import Finding
+from ..registry import rule
+
+_BANNED_CALLS = {
+    "vmap": "jax.vmap regroups float reductions/matmuls (~1 ulp drift)",
+    "take": "gather-style batching perturbs XLA lowering",
+    "take_along_axis": "gather-style batching perturbs XLA lowering",
+    "gather": "gather-style batching perturbs XLA lowering",
+}
+
+
+def _is_marked(fn: ast.AST) -> bool:
+    for dec in getattr(fn, "decorator_list", []):
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = dotted(target) or ""
+        if name == "draw_exact" or name.endswith(".draw_exact"):
+            return True
+    return False
+
+
+def _module_marked(tree: ast.Module) -> bool:
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == "__draw_exact__":
+                    return True
+    return False
+
+
+@rule("vmap-in-draw-exact",
+      "functions marked @repro.lint.draw_exact (and __draw_exact__ "
+      "modules) must not use jax.vmap or gather-style batching — "
+      "lax.map / explicit per-slice loops are the bit-exact forms")
+def check(ctx, src):
+    if src.tree is None:
+        return
+    module_wide = _module_marked(src.tree)
+    roots = []
+    if module_wide:
+        roots = [src.tree]
+    else:
+        roots = [n for n in src.walk()
+                 if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+                 and _is_marked(n)]
+    seen: set[int] = set()
+    for fn_node in roots:
+        scope = getattr(fn_node, "name", src.path)
+        for node in ast.walk(fn_node):
+            if id(node) in seen or not isinstance(node, ast.Call):
+                continue
+            seen.add(id(node))
+            name = terminal_name(node.func)
+            if name not in _BANNED_CALLS:
+                continue
+            full = dotted(node.func) or name
+            # bare-name take()/gather() of unrelated objects: require a
+            # jax/jnp/lax chain for the gather family; vmap flags always
+            if name != "vmap" and not any(
+                    full.startswith(p) for p in ("jnp.", "jax.", "lax.",
+                                                 "np.")):
+                continue
+            yield Finding(
+                rule="vmap-in-draw-exact", path=src.path,
+                line=node.lineno, col=node.col_offset,
+                message=f"{full} inside draw-exact scope "
+                        f"{scope!r}: {_BANNED_CALLS[name]}; use lax.map "
+                        "or an explicit per-slice loop (docs/lint.md)")

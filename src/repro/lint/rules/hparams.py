@@ -1,0 +1,111 @@
+"""Rule ``baked-traced-hparam`` — the PR 4 retrace bug class.
+
+History: the first Pallas wiring baked ``alpha``/``beta`` into the kernel
+closure (``functools.partial``) and declared them ``static_argnames`` on
+the jitted dispatch — every point of a hyperparameter grid recompiled every
+kernel. The fix made them traced SMEM operands (one compile per kernel
+across the whole grid; pinned by ``tests/test_kernels.py`` trace-count
+regressions). This rule keeps it fixed:
+
+  * no ``functools.partial`` may bind a sweepable hyperparameter keyword
+    (alpha/beta/eps1/tau0/...) onto a kernel entry point — the kernel
+    function set is cross-checked against the real signatures in
+    ``src/repro/kernels/`` when linting inside the repo (a static fallback
+    table keeps the rule alive on detached snippets);
+  * no ``static_argnames`` (jit or pallas dispatch) may name a sweepable
+    hyperparameter anywhere.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..asthelpers import (dotted, keyword, str_elements, terminal_name)
+from ..findings import Finding
+from ..registry import rule
+
+#: sweepable, array-valued hyperparameters that must stay traced operands
+HPARAMS = {"alpha", "beta", "eps1", "eps1_scale", "tau0", "tau"}
+
+#: fallback kernel entry points (used when ``src/repro/kernels`` is not
+#: reachable from the lint root, e.g. on detached fixture snippets)
+_FALLBACK_KERNEL_FNS = {
+    "hb_update", "hb_param_update", "tree_hb_update",
+    "censor_delta_sqnorm", "censor_delta_sqnorm_batched", "censor_select",
+    "sqnorm_batched", "censor_bank_advance", "bank_advance",
+    "quantize_ef_batched", "absmax_batched", "select_pack_ef_batched",
+    "residual_ef_batched", "pallas_call",
+}
+
+
+def _kernel_fns(ctx) -> set[str]:
+    """Kernel entry-point names, from the repo's own dispatch signatures.
+
+    Parses every module under ``src/repro/kernels/`` at the lint root and
+    collects the public function names whose signature takes at least one
+    sweepable hyperparameter — the exact set a ``functools.partial`` could
+    re-bake. Falls back to the static table off-repo.
+    """
+    cached = ctx._cache.get("__kernel_fns__")
+    if cached is not None:
+        return cached
+    names: set[str] = set()
+    for rel in ctx.project_glob("src/repro/kernels"):
+        tree = ctx.read_project_file(rel)
+        if tree is None:
+            continue
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                args = node.args
+                argnames = {a.arg for a in
+                            args.posonlyargs + args.args + args.kwonlyargs}
+                if argnames & HPARAMS:
+                    names.add(node.name)
+    names = (names | {"pallas_call"}) if names else set(_FALLBACK_KERNEL_FNS)
+    ctx._cache["__kernel_fns__"] = names
+    return names
+
+
+def _is_partial(call: ast.Call) -> bool:
+    return dotted(call.func) in ("functools.partial", "partial")
+
+
+@rule("baked-traced-hparam",
+      "functools.partial / static_argnames must not freeze array-valued "
+      "hyperparameters (alpha/beta/eps1/...) at kernel call sites — they "
+      "are traced SMEM operands, or every grid point recompiles")
+def check(ctx, src):
+    kernel_fns = None   # resolved lazily: most files have no partials
+    for node in src.walk():
+        if not isinstance(node, ast.Call):
+            continue
+
+        # -- static_argnames naming an hparam (any callable, any file) --
+        sa = keyword(node, "static_argnames")
+        if sa is not None:
+            baked = sorted(str_elements(sa) & HPARAMS)
+            if baked:
+                yield Finding(
+                    rule="baked-traced-hparam", path=src.path,
+                    line=node.lineno, col=node.col_offset,
+                    message=f"static_argnames bakes hyperparameter(s) "
+                            f"{baked}: every distinct value recompiles; "
+                            "pass them as traced operands (see "
+                            "kernels/ops.py hparam contract)")
+
+        # -- functools.partial binding an hparam keyword onto a kernel --
+        if _is_partial(node) and node.args:
+            target = terminal_name(node.args[0])
+            bound = sorted({kw.arg for kw in node.keywords
+                            if kw.arg in HPARAMS})
+            if target and bound:
+                if kernel_fns is None:
+                    kernel_fns = _kernel_fns(ctx)
+                if target in kernel_fns:
+                    yield Finding(
+                        rule="baked-traced-hparam", path=src.path,
+                        line=node.lineno, col=node.col_offset,
+                        message=f"functools.partial bakes {bound} into "
+                                f"kernel entry point {target!r}: the value "
+                                "becomes a compile-time constant and every "
+                                "hyperparameter point retraces; pass it as "
+                                "a traced operand instead")

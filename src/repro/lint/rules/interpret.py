@@ -1,0 +1,102 @@
+"""Rule ``interpret-not-routed`` — the PR 4 silent-interpreter bug class.
+
+History: before the backend axis landed, some kernels defaulted
+``interpret=True`` — calling them directly on a real TPU silently ran the
+Pallas *interpreter* instead of lowering through Mosaic, hundreds of times
+slower with zero errors. PR 4 made ``kernels/common.interpret_default``
+the single source of truth (interpret off on TPU backends, on elsewhere)
+and every kernel resolves ``interpret=None`` through it.
+
+Checks, in any file that calls ``pallas_call`` (i.e. defines kernels):
+
+  * an ``interpret`` parameter must default to ``None`` — a literal
+    ``True``/``False`` default hardwires the backend decision;
+  * the ``interpret=`` argument of ``pallas_call`` must be an immediate
+    ``resolve_interpret(...)`` / ``interpret_default()`` call — passing
+    the raw parameter through skips the routing.
+
+And everywhere outside ``tests/`` (oracle tests force interpret mode on
+purpose): no call site may pass a literal ``interpret=True/False``.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..asthelpers import is_bool_literal, keyword, terminal_name
+from ..findings import Finding
+from ..registry import rule
+
+_RESOLVERS = {"resolve_interpret", "interpret_default"}
+
+
+def _is_resolved(value: ast.expr) -> bool:
+    if isinstance(value, ast.Call):
+        return terminal_name(value.func) in _RESOLVERS
+    return isinstance(value, ast.Constant) and value.value is None
+
+
+def _is_test_file(path: str) -> bool:
+    parts = path.replace("\\", "/").split("/")
+    return any(p in ("tests", "lint_fixtures") for p in parts[:-1]) \
+        or parts[-1].startswith("test_")
+
+
+def _defines_pallas_kernels(src) -> bool:
+    return any(isinstance(n, ast.Call)
+               and terminal_name(n.func) == "pallas_call"
+               for n in src.walk())
+
+
+@rule("interpret-not-routed",
+      "Pallas kernels must resolve interpret mode through "
+      "kernels/common.interpret_default (param default None + "
+      "resolve_interpret at the pallas_call); literal interpret=True/False "
+      "silently forces the interpreter on TPU or Mosaic off it")
+def check(ctx, src):
+    in_tests = _is_test_file(src.path)
+    kernel_file = _defines_pallas_kernels(src)
+
+    for node in src.walk():
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and kernel_file:
+            args = node.args
+            all_args = args.posonlyargs + args.args + args.kwonlyargs
+            defaults = ([None] * (len(args.posonlyargs + args.args)
+                                  - len(args.defaults)) + list(args.defaults)
+                        + list(args.kw_defaults))
+            for a, d in zip(all_args, defaults):
+                if a.arg == "interpret" and is_bool_literal(d):
+                    yield Finding(
+                        rule="interpret-not-routed", path=src.path,
+                        line=a.lineno, col=a.col_offset,
+                        message=f"{node.name}: interpret defaults to a "
+                                "literal bool; default to None and resolve "
+                                "via common.resolve_interpret so direct "
+                                "calls and ops.py dispatch agree on every "
+                                "backend")
+
+        if not isinstance(node, ast.Call):
+            continue
+        fn = terminal_name(node.func)
+        value = keyword(node, "interpret")
+        if value is None:
+            continue
+        if fn == "pallas_call":
+            if not (isinstance(value, ast.Call)
+                    and terminal_name(value.func) in _RESOLVERS):
+                yield Finding(
+                    rule="interpret-not-routed", path=src.path,
+                    line=value.lineno, col=value.col_offset,
+                    message="pallas_call interpret= must be "
+                            "resolve_interpret(interpret) (or "
+                            "interpret_default()), not "
+                            f"{ast.unparse(value)!r}: unrouted values "
+                            "bypass the TPU-vs-interpreter rule")
+        elif is_bool_literal(value) and not in_tests:
+            yield Finding(
+                rule="interpret-not-routed", path=src.path,
+                line=value.lineno, col=value.col_offset,
+                message=f"call to {fn or '<expr>'} hardwires "
+                        f"interpret={value.value}: on TPU this silently "
+                        "interprets (or on CPU silently Mosaic-lowers); "
+                        "omit it (None routes through interpret_default)")

@@ -1,0 +1,89 @@
+"""Rule ``mask-multiply-select`` — the PR 6 negative-zero bug class.
+
+History: the first top-k packing draft selected kept entries as
+``payload = keep * pending``. For a suppressed entry that multiply yields
+``±0.0`` with the *sign of the payload* — and a later bitwise comparison
+(or an exact-residual telescoping check) sees ``-0.0 != +0.0``. The shipped
+kernel uses a ``where``-select precisely so ``-0.0`` survives
+(``tests/transport_conformance.py`` salts negative zeros to pin it).
+
+The rule flags multiplications where exactly one operand is mask-like and
+the product is used *bare* (assigned, returned, passed along) — a select.
+The two blessed blend forms stay silent, because their arithmetic is the
+documented bit-alignment contract, not a select:
+
+  * bank advance / additive blend: ``base + mask * delta``;
+  * complementary blend: ``mask * a + (1 - mask) * b``
+
+(both appear as operands of an enclosing ``+``/``-``, which is the
+structural signal the rule keys on). Mask-AND products of two indicator
+masks (``participate * censor_pass``) are also fine — both operands are
+mask-like.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..asthelpers import ident_tokens, terminal_name
+from ..findings import Finding
+from ..registry import rule
+
+#: identifier words that make an operand mask-like
+_MASK_WORDS = {"mask", "masks", "keep", "kp", "transmit", "send",
+               "delivered", "participate"}
+
+#: calls whose result is a broadcast mask
+_MASK_CALLS = {"_bcast", "bcast", "broadcast_mask"}
+
+
+def _is_masky(node: ast.expr) -> bool:
+    name = terminal_name(node)
+    if name is not None and (ident_tokens(name) & _MASK_WORDS):
+        return True
+    if isinstance(node, ast.Call):
+        fn = terminal_name(node.func)
+        if fn in _MASK_CALLS:
+            return True
+        # (x > t).astype(...) — a comparison turned indicator
+        if fn == "astype" and isinstance(node.func, ast.Attribute) \
+                and isinstance(node.func.value, ast.Compare):
+            return True
+    if isinstance(node, ast.Compare):
+        return True
+    return False
+
+
+def _in_additive_context(src, node: ast.AST) -> bool:
+    """True when the multiply is an operand of a surrounding +/- chain."""
+    parent = src.parent(node)
+    while isinstance(parent, ast.BinOp):
+        if isinstance(parent.op, (ast.Add, ast.Sub)):
+            return True
+        parent = src.parent(parent)
+    return False
+
+
+@rule("mask-multiply-select",
+      "bare `mask * payload` float selects lose the sign of suppressed "
+      "entries (-0.0 becomes payload-signed zero); use "
+      "jnp.where(mask != 0, x, zeros) — additive blends "
+      "`base + mask * d` / `m*a + (1-m)*b` are exempt")
+def check(ctx, src):
+    for node in src.walk():
+        if not (isinstance(node, ast.BinOp) and isinstance(node.op,
+                                                           ast.Mult)):
+            continue
+        left_m, right_m = _is_masky(node.left), _is_masky(node.right)
+        if left_m == right_m:       # neither (plain math) or both (AND)
+            continue
+        if _in_additive_context(src, node):
+            continue
+        mask_side = node.left if left_m else node.right
+        mask_txt = terminal_name(mask_side) or "mask"
+        yield Finding(
+            rule="mask-multiply-select", path=src.path,
+            line=node.lineno, col=node.col_offset,
+            message=f"multiply-select by keep-mask {mask_txt!r}: "
+                    "suppressed entries become payload-signed zeros "
+                    "(-0.0 drift breaks bitwise anchors); select with "
+                    "jnp.where(mask != 0, x, jnp.zeros_like(x))")

@@ -1,0 +1,82 @@
+"""Rule ``unseeded-randomness`` — reproducibility of every drawn number.
+
+Every stochastic element in the repo is keyed: the CSGD censor folds its
+draws from a seeded key chain (which is what makes the fed runtime's
+per-client draws reproduce the batched step draw-for-draw), tasks
+synthesize data from ``np.random.default_rng(seed)``, and sweeps partition
+by seed. A single call into numpy's *global* RNG (or the stdlib one)
+injects hidden mutable state: results change run-to-run, and inside a
+jitted path the draw silently freezes at trace time — both break the
+golden-fingerprint tests in ways that only show up later.
+
+Flags:
+  * legacy global-state numpy calls: ``np.random.rand/randn/seed/...``;
+  * ``np.random.default_rng()`` with no seed argument;
+  * stdlib ``random.<fn>()`` module-level calls.
+
+Seeded generators (``np.random.default_rng(seed)``, ``Generator`` method
+calls) and ``jax.random`` (which always takes a key) never fire.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..asthelpers import dotted
+from ..findings import Finding
+from ..registry import rule
+
+_NP_LEGACY = {
+    "seed", "rand", "randn", "randint", "random", "random_sample",
+    "ranf", "sample", "uniform", "normal", "standard_normal", "choice",
+    "shuffle", "permutation", "beta", "binomial", "poisson",
+    "exponential", "gamma", "laplace", "lognormal", "get_state",
+    "set_state",
+}
+
+_STDLIB_RANDOM = {
+    "seed", "random", "randint", "randrange", "uniform", "choice",
+    "choices", "shuffle", "sample", "gauss", "normalvariate",
+    "betavariate", "expovariate",
+}
+
+
+@rule("unseeded-randomness",
+      "no global-state RNG: np.random.<legacy> calls, unseeded "
+      "np.random.default_rng(), and stdlib random.<fn>() draw from hidden "
+      "mutable state — pass an explicit seed / Generator / jax PRNG key")
+def check(ctx, src):
+    for node in src.walk():
+        if not isinstance(node, ast.Call):
+            continue
+        full = dotted(node.func)
+        if full is None:
+            continue
+
+        if full in ("np.random.default_rng", "numpy.random.default_rng",
+                    "random.default_rng", "default_rng"):
+            if not node.args and not node.keywords:
+                yield Finding(
+                    rule="unseeded-randomness", path=src.path,
+                    line=node.lineno, col=node.col_offset,
+                    message="default_rng() without a seed draws OS "
+                            "entropy: results change run-to-run; pass an "
+                            "explicit seed")
+            continue
+
+        parts = full.split(".")
+        fn = parts[-1]
+        chain = ".".join(parts[:-1])
+        if chain in ("np.random", "numpy.random") and fn in _NP_LEGACY:
+            yield Finding(
+                rule="unseeded-randomness", path=src.path,
+                line=node.lineno, col=node.col_offset,
+                message=f"{full} uses numpy's global RNG (hidden mutable "
+                        "state; freezes at trace time under jit); use "
+                        "np.random.default_rng(seed) or a jax PRNG key")
+        elif chain == "random" and fn in _STDLIB_RANDOM:
+            yield Finding(
+                rule="unseeded-randomness", path=src.path,
+                line=node.lineno, col=node.col_offset,
+                message=f"stdlib {full} draws from process-global state; "
+                        "use np.random.default_rng(seed) or a jax PRNG "
+                        "key")

@@ -1,0 +1,145 @@
+"""Inline suppression comments.
+
+Grammar (one comment, trailing or standalone)::
+
+    # repro-lint: disable=rule-a,rule-b -- <reason>
+    # repro-lint: disable-file=rule-a -- <reason>
+
+A trailing comment suppresses matching findings on its own physical line; a
+standalone comment (nothing but whitespace before the ``#``) also
+suppresses the next *code* line — intervening blank and comment-only lines
+are skipped, so a wrapped explanation can sit between the directive and the
+statement it covers. ``disable-file`` suppresses a rule for the whole file (put it at the
+top). ``disable=all`` is deliberately not supported — suppressions are
+per-rule so each one names the invariant it waives.
+
+The reason is **required**: a suppression without the `` -- reason`` tail
+is itself a finding (``suppression-missing-reason``), as is a suppression
+naming a rule the registry doesn't know (``suppression-unknown-rule``).
+Those meta-findings cannot be suppressed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import re
+import tokenize
+
+from .findings import Finding
+
+# meta-rules emitted by this module (documented in --list-rules)
+META_RULES = {
+    "suppression-missing-reason":
+        "a `# repro-lint: disable=` comment has no ` -- <reason>` tail; "
+        "every waived invariant must say why it is safe to waive",
+    "suppression-unknown-rule":
+        "a suppression names a rule the registry doesn't know (typo, or "
+        "the rule was renamed) — it would silently suppress nothing",
+    "parse-error":
+        "the file does not parse as Python; nothing in it was checked",
+}
+
+_COMMENT_RE = re.compile(
+    r"#\s*repro-lint\s*:\s*(?P<kind>disable(?:-file)?)\s*=\s*"
+    r"(?P<rules>[A-Za-z0-9_,\s-]+?)\s*(?:--\s*(?P<reason>.*\S))?\s*$")
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    """One parsed suppression comment."""
+    rules: frozenset[str]
+    line: int               # physical line of the comment
+    standalone: bool        # comment is alone on its line
+    file_scope: bool        # disable-file
+    reason: str
+    target_line: int = 0    # next code line after a standalone comment
+
+
+def parse(path: str, source: str, known_rules: set[str]
+          ) -> tuple[list[Suppression], list[Finding]]:
+    """All suppressions in ``source`` + meta-findings for malformed ones."""
+    sups: list[Suppression] = []
+    metas: list[Finding] = []
+    try:
+        tokens = list(tokenize.generate_tokens(
+            io.StringIO(source).readline))
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        return [], []       # the engine reports parse-error separately
+    for tok in tokens:
+        if tok.type != tokenize.COMMENT:
+            continue
+        m = _COMMENT_RE.search(tok.string)
+        if m is None:
+            continue
+        line = tok.start[0]
+        rules = frozenset(r.strip() for r in m.group("rules").split(",")
+                          if r.strip())
+        reason = m.group("reason")
+        if not reason:
+            metas.append(Finding(
+                rule="suppression-missing-reason", path=path, line=line,
+                col=tok.start[1],
+                message="suppression must carry a reason: "
+                        "`# repro-lint: disable=<rule> -- <why this is "
+                        "safe>`"))
+            continue
+        unknown = sorted(rules - known_rules)
+        if unknown:
+            metas.append(Finding(
+                rule="suppression-unknown-rule", path=path, line=line,
+                col=tok.start[1],
+                message=f"suppression names unknown rule(s) {unknown}; "
+                        "see `python -m repro.lint --list-rules`"))
+            rules = rules & known_rules
+            if not rules:
+                continue
+        src_lines = source.splitlines()
+        prefix = src_lines[line - 1][:tok.start[1]]
+        standalone = not prefix.strip()
+        target = 0
+        if standalone:
+            target = _next_code_line(src_lines, line)
+            # comment-only lines between the directive and its code line
+            # continue the reason (a wrapped explanation)
+            for i in range(line, target - 1):
+                cont = src_lines[i].strip().lstrip("#").strip()
+                if cont:
+                    reason = f"{reason} {cont}"
+        sups.append(Suppression(
+            rules=rules, line=line, standalone=standalone,
+            file_scope=(m.group("kind") == "disable-file"),
+            reason=reason, target_line=target))
+    return sups, metas
+
+
+def _next_code_line(lines: list[str], after: int) -> int:
+    """First 1-based line past ``after`` that isn't blank or comment-only."""
+    for i in range(after, len(lines)):
+        stripped = lines[i].strip()
+        if stripped and not stripped.startswith("#"):
+            return i + 1
+    return after + 1
+
+
+def apply(findings: list[Finding], sups: list[Suppression]
+          ) -> list[Finding]:
+    """Mark findings covered by a suppression (returns a new list)."""
+    by_line: dict[int, list[Suppression]] = {}
+    file_wide: list[Suppression] = []
+    for s in sups:
+        if s.file_scope:
+            file_wide.append(s)
+            continue
+        by_line.setdefault(s.line, []).append(s)
+        if s.standalone:
+            by_line.setdefault(s.target_line, []).append(s)
+
+    out: list[Finding] = []
+    for f in findings:
+        hit = next(
+            (s for s in by_line.get(f.line, []) + file_wide
+             if f.rule in s.rules), None)
+        if hit is not None:
+            f = dataclasses.replace(f, suppressed=True, reason=hit.reason)
+        out.append(f)
+    return out

@@ -47,6 +47,7 @@ from ..core.quantize import (payload_bytes_dense, payload_bytes_int8,
                              tree_quantize_roundtrip,
                              tree_quantize_roundtrip_per_worker)
 from ..core.util import tree_stack_zeros
+from ..lint import draw_exact
 
 
 def _bcast(mask: jax.Array, leaf: jax.Array) -> jax.Array:
@@ -167,7 +168,8 @@ class DenseTransport:
         return payload_bytes_dense(params)
 
     def ef_bank(self, err):
-        return None
+        # None is the contract value: the dense transport keeps no EF bank
+        return None  # noqa: RET501
 
     def metrics(self, err) -> dict:
         return {}
@@ -425,6 +427,7 @@ class LowRankTransport:
         recon, q_new = _power_iter_slice(_matrixize(x), q)
         return recon.reshape(x.shape), q_new
 
+    @draw_exact
     def encode(self, pending, err):
         # explicit python loop over the static worker axis: each worker
         # slice runs the exact subgraph the row entry point runs, so the

@@ -43,6 +43,7 @@ import numpy as np
 
 from .. import opt as opt_mod
 from ..core import simulator
+from ..lint import draw_exact
 from ..core.simulator import FedTask, History
 from ..opt import (ComposedOptimizer, DenseTransport, Eq8Censor, HeavyBall,
                    NeverCensor, as_optimizer)
@@ -236,12 +237,14 @@ def run_sweep(grid: Union[ConfigGrid, Sequence[GridPoint]],
                                 vectorize, collect_metrics)
         elapsed += time.perf_counter() - t0
         for j, i in enumerate(idxs):
-            histories[i] = jax.tree_util.tree_map(lambda x: x[j], group_hist)
+            histories[i] = jax.tree_util.tree_map(
+                lambda x, j=j: x[j], group_hist)
     return SweepResult(points=points, num_iters=num_iters,
                        histories=tuple(histories), elapsed_s=elapsed,
                        num_programs=len(groups), specs=tuple(specs))
 
 
+@draw_exact
 def _run_group(pts: list[GridPoint], m: int, base_cfg,
                eps_static: Optional[float], task: FedTask,
                num_iters: int, vectorize: bool,
@@ -271,6 +274,9 @@ def _run_group(pts: list[GridPoint], m: int, base_cfg,
                                     collect_metrics=collect_metrics)
 
     if vectorize:
+        # repro-lint: disable=vmap-in-draw-exact -- vectorize=True is the
+        # documented opt-in fast path; callers accept ulp-level drift vs
+        # the default lax.map program (test_sweep_vectorized_mode_close)
         program = jax.jit(jax.vmap(one_point))
     else:
         program = jax.jit(lambda xs: jax.lax.map(one_point, xs))

@@ -140,6 +140,8 @@ def run_fed_sweep(cfg, task: FedTask,
             dsq = delta_sqnorms(delta)
             ssq = step_sqnorm(params, prev)
             censor_pass, new_cstate = opt.censor.decide(cstate, dsq, ssq)
+            # repro-lint: disable=mask-multiply-select -- both operands are
+            # 0/1 masks, so this is a boolean AND, not a payload select
             transmit = participate * censor_pass
             dropped = (jax.random.uniform(k_drop, (m,)) < loss_p
                        ).astype(jnp.float32) * transmit

@@ -1,0 +1,19 @@
+"""float-byte-counter must fire: float-dtype byte state (the PR 1 bug)."""
+import jax.numpy as jnp
+
+
+class Meter:
+    def __init__(self):
+        # BAD: byte counter state created as float32 — flatlines past 2^24
+        self.uplink_bytes = jnp.zeros((), jnp.float32)
+
+    def record(self, payload_bytes):
+        # BAD: accumulating bytes through a float cast
+        self.uplink_bytes += payload_bytes.astype(float)
+
+
+def tally(stats):
+    total_bytes = jnp.asarray(0.0, jnp.float64)   # BAD: float byte cell
+    for s in stats:
+        total_bytes = total_bytes + s
+    return total_bytes

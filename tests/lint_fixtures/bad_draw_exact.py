@@ -1,0 +1,12 @@
+"""vmap-in-draw-exact must fire: banned batching in marked scope."""
+import jax
+import jax.numpy as jnp
+
+from repro.lint import draw_exact
+
+
+@draw_exact
+def batched_step(one_point, points, bank, idx):
+    out = jax.vmap(one_point)(points)          # BAD: vmap drifts by ulps
+    picked = jnp.take(bank, idx, axis=0)       # BAD: gather-style batching
+    return out, picked

@@ -1,0 +1,17 @@
+"""baked-traced-hparam must fire: both freezing forms of the PR 4 bug."""
+import functools
+
+import jax
+
+from repro.kernels import hb_update
+
+
+def dispatch(params, prev, agg, alpha, beta):
+    # BAD: hyperparameters declared static — every grid point retraces
+    step = jax.jit(hb_update, static_argnames=("alpha", "beta"))
+    return step(params, prev, agg, alpha=alpha, beta=beta)
+
+
+def build(alpha):
+    # BAD: partial bakes alpha into the kernel entry point
+    return functools.partial(hb_update, alpha=alpha)

@@ -1,0 +1,15 @@
+"""interpret-not-routed must fire: hardwired interpreter mode (PR 4)."""
+import jax
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def double_pallas(x, interpret: bool = True):   # BAD: literal bool default
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,                    # BAD: unrouted passthrough
+    )(x)

@@ -1,0 +1,12 @@
+"""mask-multiply-select must fire: bare multiply-selects (the PR 6 bug)."""
+import jax.numpy as jnp
+
+
+def pack(pending, scores, k_threshold):
+    keep = (scores >= k_threshold).astype(jnp.float32)
+    payload = keep * pending          # BAD: -0.0 entries lose their sign
+    return payload
+
+
+def route(delta, transmit):
+    return delta * transmit           # BAD: same select, operands swapped

@@ -1,0 +1,12 @@
+"""unseeded-randomness must fire: hidden global RNG state."""
+import random
+
+import numpy as np
+
+
+def make_data(n):
+    np.random.seed(0)                       # BAD: global numpy state
+    x = np.random.randn(n, 4)               # BAD: legacy global draw
+    rng = np.random.default_rng()           # BAD: OS-entropy seed
+    jitter = random.random()                # BAD: stdlib global RNG
+    return x, rng, jitter

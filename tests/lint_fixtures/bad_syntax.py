@@ -1,0 +1,5 @@
+"""parse-error must fire: this file deliberately does not parse."""
+
+
+def broken(:
+    return 1

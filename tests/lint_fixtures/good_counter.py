@@ -1,0 +1,27 @@
+"""float-byte-counter must stay silent: split-int32 state, float views."""
+import jax.numpy as jnp
+
+MIB = 1 << 20
+
+
+class Meter:
+    def __init__(self):
+        # fine: exact split-int32 state (core/accounting.py idiom)
+        self.mib = jnp.zeros((), jnp.int32)
+        self.rem_bytes = jnp.zeros((), jnp.int32)
+
+    def record(self, payload_bytes):
+        rem = self.rem_bytes + jnp.asarray(payload_bytes, jnp.int32)
+        self.mib = self.mib + rem // MIB
+        self.rem_bytes = rem % MIB
+
+    @property
+    def uplink_bytes(self) -> float:
+        # fine: a float *view* of exact integer state is a read, not state
+        return float(self.mib) * MIB + float(self.rem_bytes)
+
+
+def loss_ema(prev, new):
+    # fine: float assignment whose target is not byte-named
+    smoothed_loss = 0.9 * prev + 0.1 * jnp.asarray(new, jnp.float32)
+    return smoothed_loss

@@ -1,0 +1,23 @@
+"""vmap-in-draw-exact must stay silent: compliant forms + unmarked code."""
+import jax
+import jax.numpy as jnp
+
+from repro.lint import draw_exact
+
+
+@draw_exact
+def batched_step(one_point, points, bank):
+    out = jax.lax.map(one_point, points)       # fine: bit-exact batching
+    rows = [one_point(bank[i]) for i in range(3)]   # fine: explicit loop
+    return out, rows
+
+
+def unmarked_helper(one_point, points):
+    # fine: no draw-exact contract here; vmap is allowed
+    return jax.vmap(one_point)(points)
+
+
+@draw_exact
+def uses_unrelated_take(queue):
+    # fine: a bare .take() on a non-jax object is not the gather family
+    return queue.take()

@@ -1,0 +1,22 @@
+"""baked-traced-hparam must stay silent: the compliant forms."""
+import functools
+
+import jax
+
+from repro.kernels import hb_update, ops
+
+
+def dispatch(params, prev, agg, alpha, beta):
+    # fine: only the backend switch is static; hparams stay traced operands
+    step = jax.jit(ops.tree_hb_update_jit, static_argnames=("use_pallas",))
+    return step(params, prev, agg, alpha, beta, use_pallas=True)
+
+
+def build(nk):
+    # fine: partial binds a shape-static tile count, not a sweepable hparam
+    return functools.partial(hb_update, nk=nk)
+
+
+def helper(alpha):
+    # fine: binding alpha onto a non-kernel helper is not the bug class
+    return functools.partial(print, alpha=alpha)

@@ -1,0 +1,17 @@
+"""interpret-not-routed must stay silent: routed through common.py."""
+import jax
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import resolve_interpret
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def double_pallas(x, interpret: bool | None = None):
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=resolve_interpret(interpret),   # fine: single source of truth
+    )(x)

@@ -1,0 +1,28 @@
+"""mask-multiply-select must stay silent: the blessed forms."""
+import jax.numpy as jnp
+
+
+def pack(pending, scores, k_threshold):
+    keep = (scores >= k_threshold).astype(jnp.float32)
+    # fine: where-select keeps the sign of suppressed entries
+    return jnp.where(keep != 0, pending, jnp.zeros_like(pending))
+
+
+def advance(bank, mask, delta):
+    # fine: additive blend (the eq.-5 bank advance), not a select
+    return bank + mask * delta
+
+
+def blend(mask, a, b):
+    # fine: complementary blend — documented bit-alignment contract
+    return mask * a + (1 - mask) * b
+
+
+def cohort_and(participate, transmit):
+    # fine: both operands are indicator masks — a boolean AND
+    return participate * transmit
+
+
+def scale(x, gain):
+    # fine: plain math, nothing mask-like on either side
+    return x * gain

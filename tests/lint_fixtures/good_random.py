@@ -1,0 +1,12 @@
+"""unseeded-randomness must stay silent: everything is keyed/seeded."""
+import jax
+import numpy as np
+
+
+def make_data(n, seed):
+    rng = np.random.default_rng(seed)       # fine: explicit seed
+    x = rng.normal(size=(n, 4))             # fine: Generator method
+    key = jax.random.PRNGKey(seed)          # fine: jax keys are explicit
+    noise = jax.random.normal(key, (n,))
+    shuffled = rng.permutation(n)           # fine: Generator, not global
+    return x, noise, shuffled

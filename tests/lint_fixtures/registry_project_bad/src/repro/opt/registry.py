@@ -1,0 +1,13 @@
+"""Fixture registry: the 'phantom' transport kind is not pinned anywhere."""
+
+CENSOR_KINDS: dict[str, type] = {
+    "never": object,
+    "eq8": object,
+}
+TRANSPORT_KINDS = {
+    "dense": object,
+    "phantom": object,      # registered but absent from every pin file
+}
+SERVER_KINDS = {
+    "gd": object,
+}

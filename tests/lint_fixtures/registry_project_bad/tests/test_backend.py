@@ -1,0 +1,3 @@
+"""Fixture golden table: fingerprints keyed by kind — 'phantom' missing."""
+
+GOLDEN = {"dense": "deadbeef"}

@@ -1,0 +1,3 @@
+"""Fixture spec pins for censor/server kinds."""
+
+SPECS = [{"censor": "never"}, {"censor": "eq8"}, {"server": "gd"}]

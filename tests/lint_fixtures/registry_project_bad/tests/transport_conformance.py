@@ -1,0 +1,3 @@
+"""Fixture pin file: parametrizes over 'dense' only — 'phantom' missing."""
+
+KINDS = ["dense"]

@@ -1,0 +1,13 @@
+"""Fixture registry: every registered kind is pinned in its pin files."""
+
+CENSOR_KINDS: dict[str, type] = {
+    "never": object,
+    "eq8": object,
+}
+TRANSPORT_KINDS = {
+    "dense": object,
+    "int8": object,
+}
+SERVER_KINDS = {
+    "gd": object,
+}

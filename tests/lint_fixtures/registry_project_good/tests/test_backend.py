@@ -1,0 +1,3 @@
+"""Fixture golden table: every transport kind has a fingerprint row."""
+
+GOLDEN = {"dense": "deadbeef", "int8": "cafef00d"}

@@ -1,0 +1,3 @@
+"""Fixture spec pins: every censor/server kind appears by literal name."""
+
+SPECS = [{"censor": "never"}, {"censor": "eq8"}, {"server": "gd"}]

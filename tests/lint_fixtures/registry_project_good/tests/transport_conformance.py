@@ -1,0 +1,3 @@
+"""Fixture pin file: parametrizes over every registered transport kind."""
+
+KINDS = ["dense", "int8"]

@@ -1,0 +1,10 @@
+"""disable-file: every finding of the named rule in this file is covered."""
+# repro-lint: disable-file=mask-multiply-select -- fixture: file-wide waiver
+
+
+def select(keep, pending):
+    return keep * pending
+
+
+def route(delta, transmit):
+    return delta * transmit

@@ -1,0 +1,6 @@
+"""Reasonless suppression: the finding stays live + a meta finding fires."""
+
+
+def select(keep, pending):
+    payload = keep * pending  # repro-lint: disable=mask-multiply-select
+    return payload

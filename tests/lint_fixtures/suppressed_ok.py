@@ -1,0 +1,13 @@
+"""Suppressions with reasons: every finding here must come back suppressed."""
+import numpy as np
+
+
+def select(keep, pending):
+    payload = keep * pending  # repro-lint: disable=mask-multiply-select -- fixture: trailing-comment suppression
+    return payload
+
+
+def draw():
+    # repro-lint: disable=unseeded-randomness -- fixture: standalone
+    # suppression with a wrapped reason covering the next code line
+    return np.random.rand(3)

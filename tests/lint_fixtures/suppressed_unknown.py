@@ -1,0 +1,6 @@
+"""Suppression naming an unknown rule: a meta finding must fire."""
+
+
+def compute(x):
+    y = x + 1  # repro-lint: disable=no-such-rule -- typo'd rule name
+    return y

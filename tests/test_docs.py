@@ -35,7 +35,8 @@ def test_markdown_files_exist():
     for required in ("README.md", "docs/architecture.md",
                      "docs/paper_map.md", "docs/sweep_guide.md",
                      "docs/opt_api.md", "docs/kernels.md",
-                     "docs/observability.md", "docs/transport_zoo.md"):
+                     "docs/observability.md", "docs/transport_zoo.md",
+                     "docs/lint.md"):
         assert required in names, f"missing {required}"
 
 
@@ -139,6 +140,25 @@ def test_observability_doc_code_executes():
     # the doc's headline objects came out right
     assert ns["ev"]["event"] == "round"
     assert "chb_step[reference]" in ns["hlo"]
+
+
+def test_lint_doc_code_executes():
+    """Doc-sync: run every ```python block of docs/lint.md, in order, in
+    one shared namespace — the rule-catalog behavior, suppression policy
+    (reason required, wrapped reasons join), draw-exact marker, and
+    findings-artifact schema are asserted inside the doc itself."""
+    guide = (REPO / "docs" / "lint.md").read_text()
+    blocks = _CODE_BLOCK_RE.findall(guide)
+    assert len(blocks) >= 6, "lint guide structure changed: update this"
+    ns = {"__name__": "lint_doc"}
+    for i, block in enumerate(blocks):
+        try:
+            exec(compile(block, f"lint.md[block {i}]", "exec"), ns)
+        except Exception as e:     # pragma: no cover - failure reporting
+            pytest.fail(f"lint.md code block {i} failed: {e!r}")
+    # the doc's headline objects came out right
+    assert ns["artifact"]["counts"]["by_rule"] == {"vmap-in-draw-exact": 1}
+    assert ns["fold_rows"].__draw_exact__ is True
 
 
 def test_sweep_guide_code_executes():

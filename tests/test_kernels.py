@@ -178,7 +178,7 @@ def test_row_matches_batched_bitwise():
     batched = ops.tree_sqnorms(tree)
     for i in range(5):
         row = ops.tree_sqnorm_row(
-            jax.tree_util.tree_map(lambda x: x[i], tree))
+            jax.tree_util.tree_map(lambda x, i=i: x[i], tree))
         assert np.asarray(row) == np.asarray(batched)[i]
 
 

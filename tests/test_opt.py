@@ -166,6 +166,36 @@ def test_spec_roundtrip_nondefault_fields():
     assert opt.from_spec(json.loads(json.dumps(opt.to_spec(o)))) == o
 
 
+def test_every_registered_kind_round_trips_through_spec():
+    """Every censor/server kind in the registries survives a spec
+    round-trip — and is pinned here by literal kind name, which is what
+    the registry-kind-unpinned lint rule checks for (repro.lint)."""
+    base = opt.to_spec(opt.make("gd", 0.05, 3))
+    assert base["censor"]["kind"] == "never"
+    assert base["server"]["kind"] == "gd"
+    censor_specs = {
+        "never": {"kind": "never"},
+        "eq8": {"kind": "eq8", "eps1": 0.2},
+        "adaptive": {"kind": "adaptive", "adaptive": 1.5, "decay": 0.9},
+        "stochastic": {"kind": "stochastic", "tau0": 10.0, "decay": 0.8,
+                       "seed": 0},
+    }
+    server_specs = {
+        "gd": {"kind": "gd", "alpha": 0.05},
+        "hb": {"kind": "hb", "alpha": 0.05, "beta": 0.4},
+    }
+    assert set(censor_specs) == set(opt.registry.CENSOR_KINDS)
+    assert set(server_specs) == set(opt.registry.SERVER_KINDS)
+    for ckind, cspec in censor_specs.items():
+        for skind, sspec in server_specs.items():
+            spec = dict(base, censor=cspec, server=sspec)
+            rebuilt = opt.from_spec(json.loads(json.dumps(spec)))
+            round_trip = opt.to_spec(rebuilt)
+            assert round_trip["censor"]["kind"] == ckind
+            assert round_trip["server"]["kind"] == skind
+            assert opt.from_spec(round_trip) == rebuilt
+
+
 def test_unknown_algorithm_lists_valid_names():
     with pytest.raises(ValueError) as ei:
         opt.make("no_such_algo", 0.1, 3)

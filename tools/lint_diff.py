@@ -1,0 +1,85 @@
+"""Compare two repro-lint findings artifacts and print what changed.
+
+  PYTHONPATH=src python tools/lint_diff.py OLD.json NEW.json
+
+Reads two ``repro-lint-findings/v1`` artifacts (as written by
+``python -m repro.lint --json-file``, schema-checked on load) and
+reports, keyed by ``(rule, path, message)`` so line-number drift from
+unrelated edits does not register:
+
+  * findings introduced since the baseline (the CI gate);
+  * findings that went from active to suppressed — each must carry a
+    reason, which is printed for review;
+  * findings resolved outright (informational).
+
+Exit status 1 if any finding was introduced, 0 otherwise — usable
+directly as a CI gate between the baseline artifact of the target branch
+and a fresh run, mirroring ``tools/bench_diff.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.lint import load_artifact  # noqa: E402
+
+
+def _key(f: dict) -> tuple:
+    return (f["rule"], f["path"], f["message"])
+
+
+def _where(f: dict) -> str:
+    return f"{f['path']}:{f['line']}: {f['rule']}"
+
+
+def diff(old: dict, new: dict) -> tuple[list[dict], list[dict], list[dict]]:
+    """(introduced, newly_suppressed, resolved) of ``new`` vs ``old``."""
+    old_active = {_key(f): f for f in old["findings"]}
+    old_any = old_active | {_key(f): f for f in old["suppressed"]}
+    new_active = {_key(f): f for f in new["findings"]}
+    new_sup = {_key(f): f for f in new["suppressed"]}
+
+    introduced = [f for k, f in sorted(new_active.items())
+                  if k not in old_any]
+    newly_suppressed = [f for k, f in sorted(new_sup.items())
+                       if k in old_active]
+    resolved = [f for k, f in sorted(old_active.items())
+                if k not in new_active and k not in new_sup]
+    return introduced, newly_suppressed, resolved
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff two repro-lint findings artifacts; "
+                    "exit 1 when findings were introduced")
+    ap.add_argument("old", help="baseline artifact")
+    ap.add_argument("new", help="candidate artifact")
+    args = ap.parse_args(argv)
+
+    old = load_artifact(args.old)
+    new = load_artifact(args.new)
+    for label, art, path in (("old", old, args.old), ("new", new, args.new)):
+        c = art["counts"]
+        print(f"{label}: {path} ({c['findings']} finding(s), "
+              f"{c['suppressed']} suppressed)")
+
+    introduced, newly_suppressed, resolved = diff(old, new)
+    for f in resolved:
+        print(f"  resolved   {_where(f)}")
+    for f in newly_suppressed:
+        print(f"  suppressed {_where(f)} -- reason: {f.get('reason')}")
+    if introduced:
+        print(f"\n{len(introduced)} finding(s) introduced:")
+        for f in introduced:
+            print(f"  INTRODUCED {_where(f)}: {f['message']}")
+        return 1
+    print("\nno findings introduced")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
