@@ -102,6 +102,14 @@ def trajectory(cfg: OptLike, task: FedTask, num_iters: int,
         against the golden fingerprints).
     Returns:
       The full ``History`` of the run (see its docstring).
+
+    The (params, state) scan carry is threaded through ``lax.scan``, so
+    XLA reuses the carry buffers across iterations automatically — the
+    per-iteration state never reallocates. Donating ``init_params`` into
+    the *enclosing* jit (``run(donate=True)``, ``train/trainer.py``)
+    extends that reuse to the input buffers themselves; it is safe
+    because every optimizer ``init`` copies ``prev_params`` before the
+    scan starts (theta^{-1} never aliases a donated theta^0).
     """
     from ..obs import compile_log
     from ..opt.compat import as_optimizer
@@ -136,7 +144,8 @@ def trajectory(cfg: OptLike, task: FedTask, num_iters: int,
 
 
 def run(cfg: OptLike, task: FedTask, num_iters: int,
-        jit: bool = True, collect_metrics: bool = False) -> History:
+        jit: bool = True, collect_metrics: bool = False,
+        donate: bool = False) -> History:
     """Run Algorithm 1 for ``num_iters`` iterations on one configuration.
 
     Args:
@@ -149,6 +158,15 @@ def run(cfg: OptLike, task: FedTask, num_iters: int,
       collect_metrics: record a per-round ``repro.obs`` MetricBag in
         ``History.metrics`` (see ``trajectory``). Off by default; turning
         it on does not change any other History field's bits.
+      donate: donate ``task.init_params`` to the compiled scan so XLA can
+        reuse its buffers for the scan carry (halves the peak footprint of
+        the parameter-sized state). Off by default because the donated
+        array is invalidated — only enable when the caller owns the task
+        and will not reuse ``init_params`` afterwards. Donation never
+        changes bits: ``FedOptimizer.init`` copies ``prev_params`` before
+        the first step (the same guard as
+        ``core.distributed.init_scan_state``), so theta^{-1} cannot alias
+        a donated theta^0.
     Returns:
       ``History`` — per-iteration trajectory plus the final optimizer state.
 
@@ -160,7 +178,10 @@ def run(cfg: OptLike, task: FedTask, num_iters: int,
         return trajectory(cfg, task._replace(init_params=params0), num_iters,
                           collect_metrics=collect_metrics)
 
-    fn = jax.jit(scan_all) if jit else scan_all
+    if jit:
+        fn = jax.jit(scan_all, donate_argnums=(0,) if donate else ())
+    else:
+        fn = scan_all
     return fn(task.init_params)
 
 

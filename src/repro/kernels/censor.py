@@ -38,7 +38,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from .common import (_LANES, _pad_to_2d, _pad_to_3d, block_for,
-                     resolve_interpret)
+                     log_traffic, resolve_interpret)
 
 __all__ = [
     "censor_delta_sqnorm", "censor_select",
@@ -79,6 +79,7 @@ def censor_delta_sqnorm(g: jax.Array, ghat: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((nr, 1), jnp.float32),
         interpret=resolve_interpret(interpret),
     )(g2, h2)
+    partials = log_traffic("censor_delta_sqnorm", (g2, h2), partials)
     return jnp.sum(partials)
 
 
@@ -114,6 +115,7 @@ def censor_select(g: jax.Array, ghat: jax.Array, transmit: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct(h2.shape, orig_dtype),
         interpret=resolve_interpret(interpret),
     )(t, g2, h2)
+    out = log_traffic("censor_select", (t, g2, h2), out)
     n = math.prod(orig_shape)
     return out.reshape(-1)[:n].reshape(orig_shape)
 
@@ -154,6 +156,7 @@ def censor_delta_sqnorm_batched(g: jax.Array, ghat: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((m, nr), jnp.float32),
         interpret=resolve_interpret(interpret),
     )(g3, h3)
+    partials = log_traffic("censor_delta_sqnorm_batched", (g3, h3), partials)
     return jnp.sum(partials, axis=1)
 
 
@@ -186,6 +189,7 @@ def sqnorm_batched(x: jax.Array, *, block_rows: int = 256,
         out_shape=jax.ShapeDtypeStruct((m, nr), jnp.float32),
         interpret=resolve_interpret(interpret),
     )(x3)
+    partials = log_traffic("sqnorm_batched", (x3,), partials)
     return jnp.sum(partials, axis=1)
 
 
@@ -230,6 +234,7 @@ def censor_bank_advance(g: jax.Array, ghat: jax.Array, mask: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct(h3.shape, dtype),
         interpret=resolve_interpret(interpret),
     )(mk, g3, h3)
+    out = log_traffic("censor_bank_advance", (mk, g3, h3), out)
     n = math.prod(shape[1:])
     return out.reshape(m, -1)[:, :n].reshape(shape)
 
@@ -270,5 +275,6 @@ def bank_advance(ghat: jax.Array, payload: jax.Array, mask: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct(h3.shape, dtype),
         interpret=resolve_interpret(interpret),
     )(mk, q3, h3)
+    out = log_traffic("bank_advance", (mk, q3, h3), out)
     n = math.prod(shape[1:])
     return out.reshape(m, -1)[:, :n].reshape(shape)

@@ -79,3 +79,58 @@ def compute_dtype(dtype) -> jnp.dtype:
     backend bit-identical to the reference jnp step at those precisions.
     """
     return jnp.promote_types(dtype, jnp.float32)
+
+
+# --------------------------------------------------- kernel traffic recorder
+# XLA's ``cost_analysis()`` over-counts interpret-mode pallas calls: the
+# interpreter emulates the grid at the HLO level (dynamic-slice copies of
+# every block per grid step), so "bytes accessed" reflects the emulation
+# machinery, not the kernel's HBM contract. The recorder below measures
+# what Mosaic would move: the padded operand + result bytes of each
+# ``pallas_call``, ticked at *trace* time by every kernel wrapper in this
+# package. Trace the step exactly once inside the context for a
+# per-execution figure (``benchmarks/kernel_roofline.py`` does).
+_TRAFFIC_LOG: dict[str, float] | None = None
+
+
+class track_kernel_bytes:
+    """Context manager recording per-kernel HBM traffic at trace time.
+
+    ``with track_kernel_bytes() as rec: jax.jit(step).lower(...)`` leaves
+    ``rec.bytes`` holding ``{kernel_name: padded operand+result bytes}``
+    summed over every pallas call traced inside the context, and
+    ``rec.total()`` the grand total. Nestable; execution-time calls of an
+    already-traced program tick nothing.
+    """
+
+    def __init__(self):
+        self.bytes: dict[str, float] = {}
+
+    def __enter__(self) -> "track_kernel_bytes":
+        global _TRAFFIC_LOG
+        self._prev = _TRAFFIC_LOG
+        _TRAFFIC_LOG = self.bytes
+        return self
+
+    def __exit__(self, *exc):
+        global _TRAFFIC_LOG
+        _TRAFFIC_LOG = self._prev
+        return False
+
+    def total(self) -> float:
+        return float(sum(self.bytes.values()))
+
+
+def log_traffic(name: str, operands, results):
+    """Tick the active traffic log with one pallas call's HBM bytes.
+
+    Pass-through: returns ``results`` unchanged so kernel wrappers can
+    wrap their ``pallas_call`` invocation in one line. Counts every
+    operand and result leaf at its padded device size (SMEM scalar blocks
+    included — they are negligible but really are transferred).
+    """
+    if _TRAFFIC_LOG is not None:
+        leaves = jax.tree_util.tree_leaves((operands, results))
+        nbytes = float(sum(x.size * x.dtype.itemsize for x in leaves))
+        _TRAFFIC_LOG[name] = _TRAFFIC_LOG.get(name, 0.0) + nbytes
+    return results

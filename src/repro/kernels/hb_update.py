@@ -25,7 +25,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from .common import (_LANES, _pad_to_2d, block_for, compute_dtype,
-                     resolve_interpret)
+                     log_traffic, resolve_interpret)
 
 
 def _hb_kernel(s_ref, t_ref, n_ref, p_ref, out_ref):
@@ -68,5 +68,6 @@ def hb_update(theta: jax.Array, nabla: jax.Array, theta_prev: jax.Array,
         out_shape=jax.ShapeDtypeStruct(t2.shape, dtype),
         interpret=resolve_interpret(interpret),
     )(scalars, t2, n2, p2)
+    out = log_traffic("hb_update", (scalars, t2, n2, p2), out)
     n = math.prod(shape)
     return out.reshape(-1)[:n].reshape(shape)

@@ -26,7 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .common import _LANES, _pad_to_3d, block_for, resolve_interpret
+from .common import (_LANES, _pad_to_3d, block_for, log_traffic,
+                     resolve_interpret)
 
 __all__ = ["residual_ef_batched", "residual_ef_row"]
 
@@ -81,6 +82,7 @@ def residual_ef_batched(pending: jax.Array, payload: jax.Array,
         out_shape=jax.ShapeDtypeStruct(p3.shape, dtype),
         interpret=resolve_interpret(interpret),
     )(sc, p3, q3, e3)
+    new_err = log_traffic("residual_ef_batched", (sc, p3, q3, e3), new_err)
     n = math.prod(shape[1:])
     return new_err.reshape(m, -1)[:, :n].reshape(shape)
 

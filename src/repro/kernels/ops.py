@@ -35,8 +35,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from . import (censor, flash_attention, hb_update, lowrank_ef, quantize_ef,
-               ref, topk_pack)
+from . import (censor, flash_attention, fused_step, hb_update, lowrank_ef,
+               quantize_ef, ref, topk_pack)
 from .common import interpret_default
 from ..obs import compile_log
 
@@ -208,6 +208,92 @@ def tree_residual_ef(pending, payload, err, mask, *, block_rows: int = 256,
         lambda p, q, e: lowrank_ef.residual_ef_batched(
             p, q, e, mask, block_rows=block_rows, interpret=interpret),
         pending, payload, err)
+
+
+@_dispatch
+def tree_fused_dense_step(grads, bank, params, prev_params, mask, alpha,
+                          beta, *, block_rows: int = 256,
+                          interpret: bool | None = None):
+    """The post-``decide`` dense megakernel over a whole pytree.
+
+    Per leaf ONE fused sweep performs the censor-select bank advance, the
+    eq.-(5) worker-sum aggregation, and the eq.-(4) heavy-ball epilogue
+    (``alpha``/``beta`` as traced SMEM operands). Returns
+    ``(new_ghat, agg, new_params)`` — bitwise the staged
+    ``tree_censor_bank_advance`` → ``tree_sum_leading`` →
+    ``tree_hb_update`` composition, in a third of the HBM sweeps.
+    """
+    leaves_t, treedef = jax.tree_util.tree_flatten(params)
+    leaves_g = treedef.flatten_up_to(grads)
+    leaves_h = treedef.flatten_up_to(bank)
+    leaves_p = treedef.flatten_up_to(prev_params)
+    outs = [fused_step.fused_dense_step(
+        g, h, t, tp, mask, alpha, beta, block_rows=block_rows,
+        interpret=interpret)
+        for g, h, t, tp in zip(leaves_g, leaves_h, leaves_t, leaves_p)]
+    unflat = jax.tree_util.tree_unflatten
+    return (unflat(treedef, [o[0] for o in outs]),
+            unflat(treedef, [o[1] for o in outs]),
+            unflat(treedef, [o[2] for o in outs]))
+
+
+@_dispatch
+def tree_int8_stats(grads, bank, err, *, block_rows: int = 256,
+                    interpret: bool | None = None):
+    """Per-worker eq.-(8) sqnorms + int8 scales, pending never materialized.
+
+    One fused reduction sweep per leaf recomputes
+    ``pending = (g - ghat) + err`` in-register and emits the sqnorm and
+    abs-max tile partials together. Returns ``(dsq, scales)``: the (M,)
+    f32 eq.-(8) left-hand side (leaf accumulation order identical to
+    ``tree_sqnorms``) and a pytree of (M,) f32 per-leaf quantization
+    scales (the staged ``where(amax > 0, amax/127, 1)`` expression).
+    """
+    leaves_g, treedef = jax.tree_util.tree_flatten(grads)
+    leaves_h = treedef.flatten_up_to(bank)
+    leaves_e = treedef.flatten_up_to(err)
+    acc = jnp.zeros((leaves_h[0].shape[0],), jnp.float32)
+    scales = []
+    for g, h, e in zip(leaves_g, leaves_h, leaves_e):
+        sq, amax = fused_step.int8_stats_batched(
+            g, h, e, block_rows=block_rows, interpret=interpret)
+        acc = acc + sq
+        scales.append(jnp.where(amax > 0, amax / 127.0,
+                                1.0).astype(jnp.float32))
+    return acc, jax.tree_util.tree_unflatten(treedef, scales)
+
+
+@_dispatch
+def tree_fused_int8_step(grads, bank, err, params, prev_params, mask,
+                         scales, alpha, beta, *, block_rows: int = 256,
+                         interpret: bool | None = None):
+    """The post-``decide`` int8+EF megakernel over a whole pytree.
+
+    Per leaf ONE fused sweep recomputes the pending delta in-register,
+    quantize-roundtrips it (the dequantized payload never touches HBM),
+    blends the error-feedback bank, advances the stale bank, aggregates
+    the workers, and applies eq. (4). ``scales`` is ``tree_int8_stats``'s
+    per-leaf (M,) scale pytree. Returns
+    ``(new_ghat, new_err, agg, new_params)`` — bitwise the staged
+    ``tree_int8_roundtrip_ef`` → ``tree_bank_advance`` →
+    ``tree_sum_leading`` → ``tree_hb_update`` composition.
+    """
+    leaves_t, treedef = jax.tree_util.tree_flatten(params)
+    leaves_g = treedef.flatten_up_to(grads)
+    leaves_h = treedef.flatten_up_to(bank)
+    leaves_e = treedef.flatten_up_to(err)
+    leaves_p = treedef.flatten_up_to(prev_params)
+    leaves_s = treedef.flatten_up_to(scales)
+    outs = [fused_step.fused_int8_step(
+        g, h, e, t, tp, mask, s, alpha, beta, block_rows=block_rows,
+        interpret=interpret)
+        for g, h, e, t, tp, s in zip(leaves_g, leaves_h, leaves_e,
+                                     leaves_t, leaves_p, leaves_s)]
+    unflat = jax.tree_util.tree_unflatten
+    return (unflat(treedef, [o[0] for o in outs]),
+            unflat(treedef, [o[1] for o in outs]),
+            unflat(treedef, [o[2] for o in outs]),
+            unflat(treedef, [o[3] for o in outs]))
 
 
 @_dispatch

@@ -27,7 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .common import _LANES, _pad_to_3d, block_for, resolve_interpret
+from .common import (_LANES, _pad_to_3d, block_for, log_traffic,
+                     resolve_interpret)
 
 __all__ = ["absmax_batched", "quantize_ef_batched"]
 
@@ -58,6 +59,7 @@ def absmax_batched(x: jax.Array, *, block_rows: int = 256,
         out_shape=jax.ShapeDtypeStruct((m, nr), x.dtype),
         interpret=resolve_interpret(interpret),
     )(x3)
+    partials = log_traffic("absmax_batched", (x3,), partials)
     return jnp.max(partials, axis=1)
 
 
@@ -123,6 +125,8 @@ def quantize_ef_batched(pending: jax.Array, err: jax.Array,
                    jax.ShapeDtypeStruct(p3.shape, dtype)],
         interpret=resolve_interpret(interpret),
     )(sc, p3, e3)
+    payload, new_err = log_traffic("quantize_ef_batched", (sc, p3, e3),
+                                   (payload, new_err))
     n = math.prod(shape[1:])
     return (payload.reshape(m, -1)[:, :n].reshape(shape),
             new_err.reshape(m, -1)[:, :n].reshape(shape))

@@ -108,6 +108,39 @@ def residual_ef_batched(pending: jax.Array, payload: jax.Array,
         + (1.0 - mk) * err.astype(pending.dtype)
 
 
+# -------------------------------------------------- fused-step oracles
+def fused_dense_step(g: jax.Array, ghat: jax.Array, theta: jax.Array,
+                     theta_prev: jax.Array, mask: jax.Array, alpha, beta
+                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(new_ghat, agg, new_theta) of the post-``decide`` dense megakernel:
+    bank advance + eq.-(5) worker sum + eq.-(4) update, per leaf."""
+    new_ghat = censor_bank_advance(g, ghat, mask)
+    agg = jnp.sum(new_ghat, axis=0)
+    return new_ghat, agg, hb_update(theta, agg, theta_prev, alpha, beta)
+
+
+def int8_stats_batched(g: jax.Array, ghat: jax.Array, err: jax.Array
+                       ) -> tuple[jax.Array, jax.Array]:
+    """(sqnorms, amax) of the int8 pending delta, never materialized."""
+    pending = (g.astype(ghat.dtype) - ghat) + err.astype(ghat.dtype)
+    return sqnorm_batched(pending), absmax_batched(pending)
+
+
+def fused_int8_step(g: jax.Array, ghat: jax.Array, err: jax.Array,
+                    theta: jax.Array, theta_prev: jax.Array,
+                    mask: jax.Array, scale: jax.Array, alpha, beta
+                    ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """(new_ghat, new_err, agg, new_theta) of the post-``decide`` int8+EF
+    megakernel: quantize round-trip + EF blend + bank advance + eq.-(5)
+    worker sum + eq.-(4) update, per leaf."""
+    pending = (g.astype(ghat.dtype) - ghat) + err.astype(ghat.dtype)
+    payload, new_err = quantize_ef_batched(pending, err, mask, scale)
+    new_ghat = bank_advance(ghat, payload, mask)
+    agg = jnp.sum(new_ghat, axis=0)
+    return (new_ghat, new_err, agg,
+            hb_update(theta, agg, theta_prev, alpha, beta))
+
+
 def flash_attention_fwd(q, k, v, *, causal: bool = True,
                         window=None, scale=None):
     """Naive attention oracle; q (B,H,L,d), k/v (B,K,S,d)."""

@@ -28,7 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .common import _LANES, _pad_to_3d, block_for, resolve_interpret
+from .common import (_LANES, _pad_to_3d, block_for, log_traffic,
+                     resolve_interpret)
 
 __all__ = ["select_pack_ef_batched", "select_pack_ef_row"]
 
@@ -93,6 +94,8 @@ def select_pack_ef_batched(pending: jax.Array, err: jax.Array,
                    jax.ShapeDtypeStruct(p3.shape, dtype)],
         interpret=resolve_interpret(interpret),
     )(sc, p3, e3, k3)
+    payload, new_err = log_traffic("select_pack_ef_batched",
+                                   (sc, p3, e3, k3), (payload, new_err))
     n = math.prod(shape[1:])
     return (payload.reshape(m, -1)[:, :n].reshape(shape),
             new_err.reshape(m, -1)[:, :n].reshape(shape))

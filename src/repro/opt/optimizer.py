@@ -20,11 +20,12 @@ from ..core.accounting import CommStats
 from ..core.censoring import delta_sqnorms, step_sqnorm
 from ..core.util import tree_sqnorm, tree_stack_zeros, tree_sum_leading
 from ..kernels import censor as kernel_censor
+from ..kernels import fused_step as kernel_fused
 from ..kernels import ops as kernel_ops
 from .api import OptState, StepStats, static_pos
 from .censor import CensorPolicy, Eq8Censor, NeverCensor
 from .server import GradientDescent, HeavyBall, ServerUpdate
-from .transport import DenseTransport, Transport, _bcast
+from .transport import DenseTransport, Int8Transport, Transport, _bcast
 
 BACKENDS = ("reference", "pallas")
 
@@ -185,8 +186,14 @@ class ComposedOptimizer:
         if self.bank_dtype is not None:
             bank = jax.tree_util.tree_map(
                 lambda x: x.astype(self.bank_dtype), bank)
+        # copy: prev_params must not alias params, mirroring the step-0
+        # guard in core/distributed.init_scan_state — callers jit the step
+        # with params AND state donated (train/trainer.py,
+        # simulator.run(donate=True)), and two donated views of one buffer
+        # would let XLA overwrite theta^0 while it is still theta^{-1}
+        prev = jax.tree_util.tree_map(jnp.copy, params)
         return OptState(
-            prev_params=params,
+            prev_params=prev,
             ghat=bank,
             err=self.transport.init(params, self.num_workers),
             comm=CommStats.init(self.num_workers),
@@ -298,33 +305,66 @@ class ComposedOptimizer:
         reference's native-bf16 arithmetic (they match the ``ref.py``
         oracles instead).
         """
+        # fused megakernel routing (kernels/fused_step.py): dense and
+        # int8+EF run the whole post-``decide`` tail as ONE sweep per
+        # leaf; topk/lowrank (host-graph top_k / factor matmuls between
+        # the elementwise stages) keep the staged path. The flag is
+        # consulted at trace time — ``fused_step.force_staged()`` pins a
+        # program to the staged kernels for A/B comparison.
+        fused = kernel_fused.fusion_enabled()
+        int8_fused = fused and type(self.transport) is Int8Transport
         quantized = self.transport.stateful
-        if quantized:
+        dense_fused = fused and not quantized
+        pending = scales = None
+        if int8_fused:
+            # sweep 1: sqnorm + abs-max partials from an in-register
+            # pending recompute — the pending tree is never materialized
+            dsq, scales = kernel_ops.tree_int8_stats(
+                worker_grads, state.ghat, state.err)
+        elif quantized:
             delta = jax.tree_util.tree_map(
                 lambda g, h: g.astype(h.dtype) - h,
                 worker_grads, state.ghat)
             pending = self.transport.prepare(delta, state.err)
             dsq = kernel_ops.tree_sqnorms(pending)
         else:
-            pending = None
             dsq = kernel_ops.tree_delta_sqnorms(worker_grads, state.ghat)
         ssq = step_sqnorm(params, state.prev_params)
         mask, new_censor = self.censor.decide(state.censor, dsq, ssq)
 
-        if quantized:
-            payload, new_err = self.transport.encode_feedback_pallas(
-                pending, state.err, mask)
-            new_ghat = kernel_ops.tree_bank_advance(state.ghat, payload,
-                                                    mask)
-        else:
+        alpha = self.server.alpha
+        beta = getattr(self.server, "beta", 0.0)
+        if dense_fused:
             new_err = state.err
-            new_ghat = kernel_ops.tree_censor_bank_advance(
-                worker_grads, state.ghat, mask)
+            new_ghat, agg, new_params = kernel_ops.tree_fused_dense_step(
+                worker_grads, state.ghat, params, state.prev_params, mask,
+                alpha, beta)
+        elif int8_fused:
+            new_ghat, new_err, agg, new_params = \
+                kernel_ops.tree_fused_int8_step(
+                    worker_grads, state.ghat, state.err, params,
+                    state.prev_params, mask, scales, alpha, beta)
+        else:
+            if quantized:
+                payload, new_err = self.transport.encode_feedback_pallas(
+                    pending, state.err, mask)
+                new_ghat = kernel_ops.tree_bank_advance(state.ghat,
+                                                        payload, mask)
+            else:
+                new_err = state.err
+                new_ghat = kernel_ops.tree_censor_bank_advance(
+                    worker_grads, state.ghat, mask)
+            agg = tree_sum_leading(new_ghat)
+            new_params = self.apply_server(params, state.prev_params, agg)
         per_tx_bytes = self.transport.payload_bytes(params)
 
-        agg = tree_sum_leading(new_ghat)
-        new_params = self.apply_server(params, state.prev_params, agg)
-
+        if dense_fused or int8_fused:
+            # diagnostic-only recompute: the kernel's agg output is
+            # bitwise-identical, but a sqnorm fused over a sliced pallas
+            # buffer groups its reduction differently from one fused over
+            # the host sum — recomputing keeps the stat's HLO subgraph
+            # identical to the staged/reference path (tier-1 bit parity)
+            agg = tree_sum_leading(new_ghat)
         stats = StepStats(mask=mask, delta_sq=dsq, step_sq=ssq,
                           agg_grad_sqnorm=tree_sqnorm(agg))
         new_state = OptState(

@@ -125,11 +125,27 @@ def test_simulator_bitwise_f64(linreg, kw):
 
 
 def test_golden_fingerprints_both_backends(linreg, task32):
-    """Both backends reproduce the recorded golden hex trajectory."""
+    """Both backends reproduce the recorded golden hex trajectory.
+
+    The pallas leg runs the one-sweep fused step (its default route), so
+    this golden also pins the megakernel against the reference bits."""
     for backend in opt.BACKENDS:
         o = opt.make("chb", linreg.alpha_paper, M, backend=backend)
         got = _fingerprint(simulator.run(o, task32, ITERS))
         assert got == GOLDEN_CHB_F32, (backend, got)
+
+
+@pytest.mark.parametrize("kind", ["dense", "int8"])
+def test_golden_fingerprints_staged_pallas(linreg, task32, kind):
+    """``force_staged()`` pins the pre-fusion kernel chain to the SAME
+    goldens: the fused and staged pallas routes may never drift apart."""
+    from repro.kernels import fused_step
+    t = opt.make_transport(kind)
+    o = opt.make("chb", linreg.alpha_paper, M, transport=t,
+                 backend="pallas")
+    with fused_step.force_staged():
+        got = _fingerprint(simulator.run(o, task32, ITERS))
+    assert got == GOLDEN_TRANSPORT_F32[kind], (kind, got)
 
 
 @pytest.mark.parametrize("kind", sorted(opt.TRANSPORT_KINDS))
@@ -210,8 +226,7 @@ def test_sweep_pallas_bitwise_one_program(linreg, task32):
     # dispatch traced exactly once (the retrace-bug regression)
     assert res_p.num_programs == 1
     assert kernel_ops.trace_counts == {"tree_delta_sqnorms": 1,
-                                       "tree_censor_bank_advance": 1,
-                                       "tree_hb_update": 1}
+                                       "tree_fused_dense_step": 1}
     res_r = sweep.run_sweep(grid, task32, num_iters=40, base_cfg=base_r)
     for i in range(len(res_p)):
         hp, hr = res_p.history(i), res_r.history(i)

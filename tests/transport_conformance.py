@@ -48,7 +48,8 @@ from repro.core import simulator
 from repro.core.accounting import CommStats
 from repro.core.util import tree_worker_slice
 from repro.data import paper_tasks
-from repro.kernels import lowrank_ef, ref, topk_pack
+from repro.kernels import (censor, fused_step, hb_update, lowrank_ef,
+                           quantize_ef, ref, topk_pack)
 
 M = 5
 ITERS = 40
@@ -365,6 +366,184 @@ def test_lowrank_kernel_matches_oracle(dtype):
     full = lowrank_ef.residual_ef_batched(pending, payload, err,
                                           jnp.ones((4,), jnp.float32))
     np.testing.assert_array_equal(np.asarray(row), np.asarray(full[1]))
+
+
+# ------------------------------------------------- fused-step conformance
+# The one-sweep megakernel (kernels/fused_step.py) is the default pallas
+# route for dense and int8+EF; topk/lowrank keep the staged chain. Every
+# kind is enrolled here: the trajectory tests pin fused == force_staged()
+# bit-for-bit (a no-op for the staged kinds, a real contract for the
+# fused ones), and the kernel pins compare the megakernel against the
+# staged kernel chain AND the ref.py oracle, element-for-element.
+@pytest.mark.parametrize("kind", KINDS)
+def test_fused_matches_staged_trajectory_f32(linreg, task32, kind):
+    o = _chb(linreg.alpha_paper, kind, "pallas")
+    h_fused = simulator.run(o, task32, ITERS)
+    with fused_step.force_staged():
+        h_staged = simulator.run(o, task32, ITERS)
+    _assert_histories_equal(h_fused, h_staged)
+
+
+@pytest.mark.parametrize("kind", ["dense", "int8"])
+def test_fused_matches_staged_trajectory_f64(linreg, kind):
+    require_x64()
+    o = _chb(linreg.alpha_paper, kind, "pallas")
+    h_fused = simulator.run(o, linreg.task, ITERS)
+    with fused_step.force_staged():
+        h_staged = simulator.run(o, linreg.task, ITERS)
+    _assert_histories_equal(h_fused, h_staged)
+
+
+@pytest.mark.parametrize("kind", ["dense", "int8"])
+def test_fused_metrics_read_only(linreg, task32, kind):
+    """Metrics collection must stay read-only on the fused route too."""
+    o = _chb(linreg.alpha_paper, kind, "pallas")
+    _assert_histories_equal(simulator.run(o, task32, 25),
+                            simulator.run(o, task32, 25,
+                                          collect_metrics=True))
+
+
+def _fused_inputs(dtype, m=5, seed=4):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 5)
+    g = jax.random.normal(keys[0], (m, 300), dtype)
+    # salt negative zeros: the censored rows of the bank advance and the
+    # quantizer's round-trip must preserve their sign bit
+    g = g.at[:, 11].set(jnp.asarray(-0.0, dtype))
+    ghat = jax.random.normal(keys[1], (m, 300), dtype) * 0.5
+    err = jax.random.normal(keys[2], (m, 300), dtype) * 0.1
+    theta = jax.random.normal(keys[3], (300,), dtype)
+    prev = theta - jax.random.normal(keys[4], (300,), dtype) * 0.01
+    mask = jnp.asarray([1.0, 0.0, 1.0, 1.0, 0.0][:m], jnp.float32)
+    return g, ghat, err, theta, prev, mask
+
+
+@pytest.mark.parametrize("dtype", ["float32", "float64"])
+def test_fused_dense_kernel_matches_staged_and_oracle(dtype):
+    if dtype == "float64":
+        require_x64()
+    g, ghat, _, theta, prev, mask = _fused_inputs(jnp.dtype(dtype))
+
+    # ONE compiled program computes all three routes — how they coexist
+    # in real use (the whole step is inside one scan jit), and the only
+    # granularity at which XLA's FMA-contraction choices are pinned: a
+    # separately-jitted epilogue may contract ``t - alpha*agg``
+    # differently from the same expression inlined next to the staged
+    # kernels (the trajectory tests cover the cross-program contract)
+    @jax.jit
+    def all_routes(g, ghat, theta, prev, mask):
+        alpha, beta = 0.05, 0.4
+        fused = fused_step.fused_dense_step(g, ghat, theta, prev, mask,
+                                            alpha, beta)
+        # staged kernel chain: bank advance -> eq.(5) sum -> eq.(4) kernel
+        ng = censor.censor_bank_advance(g, ghat, mask)
+        agg = jnp.sum(ng, axis=0)
+        staged = (ng, agg,
+                  hb_update.hb_update(theta, agg, prev, alpha, beta))
+        oracle = ref.fused_dense_step(g, ghat, theta, prev, mask,
+                                      alpha, beta)
+        return fused, staged, oracle
+
+    got, staged, want = all_routes(g, ghat, theta, prev, mask)
+    for got_x, staged_x, want_x in zip(got, staged, want):
+        np.testing.assert_array_equal(np.asarray(got_x),
+                                      np.asarray(staged_x))
+        np.testing.assert_array_equal(np.asarray(got_x), np.asarray(want_x))
+        np.testing.assert_array_equal(np.signbit(np.asarray(got_x)),
+                                      np.signbit(np.asarray(want_x)))
+
+
+@pytest.mark.parametrize("dtype", ["float32", "float64"])
+def test_fused_int8_kernel_matches_staged_and_oracle(dtype):
+    if dtype == "float64":
+        require_x64()
+    g, ghat, err, theta, prev, mask = _fused_inputs(jnp.dtype(dtype),
+                                                    seed=5)
+
+    # one compiled program for all routes (see the dense test above)
+    @jax.jit
+    def all_routes(g, ghat, err, theta, prev, mask):
+        alpha, beta = 0.05, 0.4
+        # sweep 1: the stats kernel vs the staged pending materialization
+        sq, am = fused_step.int8_stats_batched(g, ghat, err)
+        pending = (g.astype(ghat.dtype) - ghat) + err.astype(ghat.dtype)
+        staged_stats = (censor.sqnorm_batched(pending),
+                        quantize_ef.absmax_batched(pending))
+        scale = jnp.where(am > 0, am / 127.0, 1.0).astype(jnp.float32)
+        # sweep 2: the megakernel vs the staged chain and the oracle
+        fused = fused_step.fused_int8_step(g, ghat, err, theta, prev,
+                                           mask, scale, alpha, beta)
+        payload, ne = quantize_ef.quantize_ef_batched(pending, err, mask,
+                                                      scale)
+        ng = censor.bank_advance(ghat, payload, mask)
+        agg = jnp.sum(ng, axis=0)
+        staged = (ng, ne, agg,
+                  hb_update.hb_update(theta, agg, prev, alpha, beta))
+        oracle = ref.fused_int8_step(g, ghat, err, theta, prev, mask,
+                                     scale, alpha, beta)
+        return (sq, am), staged_stats, fused, staged, oracle, payload, \
+            pending
+
+    ((got_sq, got_am), staged_stats, got, staged, want, payload,
+     pending) = all_routes(g, ghat, err, theta, prev, mask)
+    np.testing.assert_array_equal(np.asarray(got_sq),
+                                  np.asarray(staged_stats[0]))
+    np.testing.assert_array_equal(np.asarray(got_am),
+                                  np.asarray(staged_stats[1]))
+    for got_x, staged_x, want_x in zip(got, staged, want):
+        np.testing.assert_array_equal(np.asarray(got_x),
+                                      np.asarray(staged_x))
+        np.testing.assert_array_equal(np.asarray(got_x), np.asarray(want_x))
+    # EF telescoping survives fusion: the staged payload (bitwise what
+    # the megakernel applies in-register) plus the fused residual
+    # reconstructs pending on transmitted workers — exactly at f64; at
+    # f32 the final ``payload + err`` re-rounding can cost an ulp on
+    # arbitrary (pending, err) data, so only closeness is asserted here
+    # (test_ef_residual_telescopes pins the exact f32 contract on the
+    # transport's own chained construction, which the fused route
+    # reproduces bitwise via the staged-equality asserts above)
+    tx = np.asarray(mask) != 0
+    recon = np.asarray(payload)[tx] + np.asarray(got[1])[tx]
+    if dtype == "float64":
+        np.testing.assert_array_equal(recon, np.asarray(pending)[tx])
+    else:
+        np.testing.assert_allclose(recon, np.asarray(pending)[tx],
+                                   rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("dtype", ["float32", "float64"])
+def test_fused_kernels_row_slice_draw_exact(dtype):
+    """M=1 single-worker runs of the megakernels reproduce the matching
+    worker slice of the M=5 batched call bit-for-bit (the property the
+    ``repro.fed`` event runtime's per-client sends rely on)."""
+    if dtype == "float64":
+        require_x64()
+    g, ghat, err, theta, prev, _ = _fused_inputs(jnp.dtype(dtype), seed=6)
+    ones = jnp.ones((g.shape[0],), jnp.float32)
+    one = jnp.ones((1,), jnp.float32)
+    full = fused_step.fused_dense_step(g, ghat, theta, prev, ones,
+                                       0.05, 0.4)
+    sq_f, am_f = fused_step.int8_stats_batched(g, ghat, err)
+    scale = jnp.where(am_f > 0, am_f / 127.0, 1.0).astype(jnp.float32)
+    full8 = fused_step.fused_int8_step(g, ghat, err, theta, prev, ones,
+                                       scale, 0.05, 0.4)
+    for i in range(g.shape[0]):
+        row = fused_step.fused_dense_step(
+            g[i:i + 1], ghat[i:i + 1], theta, prev, one, 0.05, 0.4)
+        np.testing.assert_array_equal(np.asarray(row[0][0]),
+                                      np.asarray(full[0][i]))
+        sq_r, am_r = fused_step.int8_stats_batched(
+            g[i:i + 1], ghat[i:i + 1], err[i:i + 1])
+        np.testing.assert_array_equal(np.asarray(sq_r[0]),
+                                      np.asarray(sq_f[i]))
+        np.testing.assert_array_equal(np.asarray(am_r[0]),
+                                      np.asarray(am_f[i]))
+        row8 = fused_step.fused_int8_step(
+            g[i:i + 1], ghat[i:i + 1], err[i:i + 1], theta, prev, one,
+            scale[i:i + 1], 0.05, 0.4)
+        np.testing.assert_array_equal(np.asarray(row8[0][0]),
+                                      np.asarray(full8[0][i]))
+        np.testing.assert_array_equal(np.asarray(row8[1][0]),
+                                      np.asarray(full8[1][i]))
 
 
 # ------------------------------------- int8+EF property tests (hypothesis)
