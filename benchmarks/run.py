@@ -20,8 +20,8 @@ points), so a result row is reproducible from the artifact alone via
 Benchmark modules are imported lazily (module name == benchmark name), so
 ``--only`` validation costs nothing and a typo'd name fails fast with the
 list of valid names instead of silently printing an empty CSV. Setting
-``REPRO_BENCH_FAST=1`` asks benchmarks that support it (kernel_roofline)
-to run tiny CI-smoke shapes.
+``REPRO_BENCH_FAST=1`` asks benchmarks that support it (kernel_roofline,
+transport_zoo, fed_mesh) to run tiny CI-smoke shapes.
 """
 import argparse
 import importlib
@@ -45,6 +45,7 @@ BENCH_NAMES = (
     "serving",
     "roofline",
     "kernel_roofline",
+    "fed_mesh",
 )
 
 

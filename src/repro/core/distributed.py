@@ -74,21 +74,62 @@ def _payload_bytes(cfg, params) -> int:
 
 
 def _shard_map(f, mesh, in_specs, out_specs, manual_axes):
-    """Partial-manual shard_map via the top-level ``jax.shard_map`` API.
+    """shard_map across jax versions, split by manual-axis coverage.
 
-    On jax 0.4.x the only alternative is the experimental
-    ``shard_map(auto=...)`` API, whose partial-manual mode hard-crashes the
-    XLA SPMD partitioner (process abort, no traceback) for this program —
-    see tools/xla_partitioner_repro.py — so fail fast instead.
+    Full-manual (``manual_axes`` covers every mesh axis) works everywhere:
+    on jax >= 0.5 via the top-level ``jax.shard_map``, on the pinned 0.4.x
+    via ``jax.experimental.shard_map.shard_map`` with ``check_rep=False``
+    (its replication checker predates several collectives we use; the
+    out_specs still enforce the layout). This is the path the client-mesh
+    fold (``make_client_fold``) takes.
+
+    Partial-manual (some axes left auto, e.g. the pod strategy's manual
+    "pod" over an auto data/model submesh) needs jax >= 0.5: the 0.4.x
+    experimental ``shard_map(auto=...)`` hard-crashes the XLA SPMD
+    partitioner for this program (process abort, no traceback — HLO repro
+    preserved in launch/hlo_analysis.py's module docstring), so fail fast.
     """
-    if not hasattr(jax, "shard_map"):
-        raise NotImplementedError(
-            "the pod strategy needs the top-level jax.shard_map API "
-            "(jax >= 0.5); the 0.4.x experimental shard_map trips an XLA "
-            "SPMD-partitioner CHECK in partial-manual mode")
-    return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs,
-                         axis_names=set(manual_axes), check_vma=False)
+    manual_axes = set(manual_axes)
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs,
+                             axis_names=manual_axes, check_vma=False)
+    if manual_axes == set(mesh.axis_names):
+        from jax.experimental.shard_map import shard_map as _exp_shard_map
+        return _exp_shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=False)
+    raise NotImplementedError(
+        "partial-manual shard_map (manual "
+        f"{sorted(manual_axes)} over auto "
+        f"{sorted(set(mesh.axis_names) - manual_axes)}) needs the "
+        "top-level jax.shard_map API (jax >= 0.5); the 0.4.x experimental "
+        "shard_map trips an XLA SPMD-partitioner CHECK in partial-manual "
+        "mode")
+
+
+def make_client_fold(mesh, axis: str = "clients"):
+    """Build the server-side quorum fold for a client mesh.
+
+    Takes a pytree whose leaves are ``(K, ...)`` stacks of per-shard
+    partial sums (one row per device on ``axis``, assembled with
+    ``launch.sharding.stack_shards``) and returns the replicated total:
+    each shard contributes its own row and a single ``psum`` over ``axis``
+    folds them — the ONLY cross-shard collective in the sharded federated
+    runtime, so it is what ``obs.hlo_report`` surfaces as the fold cost.
+
+    The fold is a fixed-order K-term tree reduction, identical for every
+    output element, which is what makes the K-invariance anchors in
+    docs/fed_scaling.md hold to ulp-level (and bitwise at K=1, where the
+    psum is the identity).
+    """
+    from jax.sharding import PartitionSpec as _P
+
+    def fold_local(stacked):
+        return jax.tree_util.tree_map(
+            lambda v: jax.lax.psum(v[0], axis), stacked)
+
+    return _shard_map(fold_local, mesh, in_specs=(_P(axis),),
+                      out_specs=_P(), manual_axes={axis})
 
 
 # ============================================================ scan strategy

@@ -1,1 +1,1 @@
-from . import lm_data, paper_tasks
+from . import edge_tasks, lm_data, paper_tasks

@@ -15,11 +15,18 @@ participation, and the energy / wall-clock cost of every byte.
 
 ``fed.sync_config(M)`` is the correctness anchor: it reproduces
 ``core.simulator.run`` exactly (see tests/test_fed_runtime.py).
+
+Past ~10^3 clients the event heap stops scaling; ``fed.run_mesh`` runs
+the same deployment knobs as synchronous rounds with the client axis
+sharded over a device mesh (10^5–10^6 clients — see docs/fed_scaling.md
+and ``fed.mesh``'s module docstring for the exactness anchors).
 """
 from .channel import ChannelConfig, Transmission
-from .clients import (ClientProfile, Population, duty_cycle_population,
-                      intermittent_population, straggler_population,
-                      uniform_population)
+from .clients import (ClientProfile, Population, VectorPopulation,
+                      duty_cycle_population, intermittent_population,
+                      straggler_population, uniform_population,
+                      uniform_vector_population)
 from .energy import EdgeStats, EnergyModel
+from .mesh import MeshHistory, MeshScenario, run_mesh
 from .runner import (EdgeConfig, EdgeHistory, edge_metrics_to_accuracy,
-                     run_edge, sync_config)
+                     quorum_need, run_edge, sync_config)

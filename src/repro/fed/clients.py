@@ -97,6 +97,21 @@ class Population:
     def num_clients(self) -> int:
         return len(self.profiles)
 
+    def as_vector(self) -> "VectorPopulation":
+        """Columnar view for the mesh runtime (``fed.mesh``).
+
+        Keeps the mean compute latency and power per client; jitter and
+        availability laws are event-runtime concepts and are dropped (the
+        mesh runtime's wall-clock model is the nominal mean-latency
+        straggler bound — see docs/fed_scaling.md).
+        """
+        return VectorPopulation(
+            compute_mean_s=np.asarray(
+                [p.compute_mean_s for p in self.profiles], np.float64),
+            compute_w=np.asarray(
+                [p.compute_w for p in self.profiles], np.float64),
+            participation=self.participation)
+
     def sample_cohort(self, idle_available: Sequence[int],
                       rng: np.random.Generator) -> list[int]:
         """Server-side client sampling: choose ceil(p * |candidates|)."""
@@ -107,6 +122,65 @@ class Population:
         if k >= len(cands):
             return cands
         return sorted(rng.choice(cands, size=k, replace=False).tolist())
+
+
+@dataclasses.dataclass(frozen=True)
+class VectorPopulation:
+    """Columnar client population for the mesh runtime (``fed.mesh``).
+
+    ``Population`` keeps one ``ClientProfile`` object per client — fine
+    for the event runtime's hundreds of clients, hopeless for 10^5–10^6
+    (a million Python objects before the first round). This is the same
+    information as plain arrays, sliceable into contiguous per-shard
+    blocks. Only the knobs the synchronous mesh rounds consume are
+    carried: per-client compute latency/power (wall-clock + energy
+    models) — availability/jitter laws stay event-runtime-only.
+
+    Attributes:
+      compute_mean_s: (M,) mean seconds per local gradient evaluation.
+      compute_w: (M,) device power draw while computing, in watts.
+      participation: per-client per-round cohort-join probability (the
+        mesh runtime's i.i.d. Bernoulli analogue of cohort sampling,
+        matching ``sweep.fed_sweep``).
+    """
+    compute_mean_s: np.ndarray
+    compute_w: np.ndarray
+    participation: float = 1.0
+
+    def __post_init__(self):
+        object.__setattr__(self, "compute_mean_s",
+                           np.asarray(self.compute_mean_s, np.float64))
+        object.__setattr__(self, "compute_w",
+                           np.asarray(self.compute_w, np.float64))
+        if self.compute_mean_s.shape != self.compute_w.shape or \
+                self.compute_mean_s.ndim != 1:
+            raise ValueError("compute_mean_s/compute_w must be matching "
+                             "(M,) vectors")
+        if not 0.0 < self.participation <= 1.0:
+            raise ValueError("participation must be in (0, 1]")
+
+    @property
+    def num_clients(self) -> int:
+        return int(self.compute_mean_s.shape[0])
+
+
+def uniform_vector_population(num_clients: int, compute_mean_s: float = 1.0,
+                              compute_w: float = 2.0,
+                              participation: float = 1.0,
+                              straggler_frac: float = 0.0,
+                              straggler_slowdown: float = 10.0,
+                              seed: int = 0) -> VectorPopulation:
+    """Columnar population, optionally with a straggler tail."""
+    mean = np.full((num_clients,), compute_mean_s, np.float64)
+    if straggler_frac > 0.0:
+        rng = np.random.default_rng(seed)
+        n_slow = int(round(straggler_frac * num_clients))
+        slow = rng.choice(num_clients, size=n_slow, replace=False)
+        mean[slow] *= straggler_slowdown
+    return VectorPopulation(
+        compute_mean_s=mean,
+        compute_w=np.full((num_clients,), compute_w, np.float64),
+        participation=participation)
 
 
 # ------------------------------------------------------------ constructors

@@ -47,6 +47,20 @@ class EnergyModel:
         w = self.compute_w if self.compute_w is not None else profile_w
         return w * seconds
 
+    def round_energy(self, attempted, cohort, payload_bytes: int):
+        """Radio joules for one synchronous round (or a whole (B, R) grid).
+
+        ``attempted`` uplinks each pay the tx cost (drops burn air energy
+        too); every ``cohort`` member receives the broadcast. This is the
+        shared accounting for the synchronous surfaces —
+        ``sweep.fed_sweep`` and the mesh runtime (``fed.mesh``) — so their
+        energy frontiers are comparable by construction; the event runtime
+        (``fed.runner``) accrues the same model per transmission instead.
+        Accepts scalars or numpy arrays (vectorized over rounds/points).
+        """
+        return (attempted * self.tx_energy(payload_bytes)
+                + cohort * self.rx_energy(payload_bytes))
+
 
 @dataclasses.dataclass
 class EdgeStats:

@@ -89,6 +89,18 @@ class EdgeConfig:
             raise ValueError("quorum must be in (0, 1]")
 
 
+def quorum_need(quorum: float, cohort_size: int) -> int:
+    """Arrivals required before theta advances: ``max(1, ceil(q * |C|))``.
+
+    The single definition of quorum shared by every surface: the event
+    loop (``run_edge``) blocks on this count, and the synchronous rounds
+    (``sweep.fed_sweep``, ``fed.mesh``) compute the same predicate
+    in-graph as ``#arrived >= ceil(q * #cohort)`` with an empty-cohort
+    guard — integer-identical for every non-empty cohort.
+    """
+    return max(1, math.ceil(quorum * cohort_size))
+
+
 def sync_config(num_clients: int, seed: int = 0) -> EdgeConfig:
     """The degenerate scenario that must reproduce ``core/simulator.run``.
 
@@ -367,7 +379,7 @@ def run_edge(cfg, task: FedTask, edge: EdgeConfig,
 
     while round_ < num_rounds:
         cohort = dispatch_cohort()
-        need = max(1, math.ceil(edge.quorum * len(cohort)))
+        need = quorum_need(edge.quorum, len(cohort))
         while arrived_from.get(round_, 0) < need:
             handle(heapq.heappop(heap))
         # record f(theta^k) *before* the update, matching simulator.run

@@ -86,7 +86,8 @@ def run_case(arch: str, shape: str, multi_pod: bool, strategy: str = None,
         # NOTE: the shard_map("pod") strategy trips an XLA SPMD-partitioner
         # CHECK (spmd_partitioner_util.cc:504) when a while loop coexists
         # with model-axis sharding at this mesh factorization (512 host
-        # devices). See tools/xla_partitioner_repro.py. The scan strategy
+        # devices). Minimal repro preserved in launch/hlo_analysis.py's
+        # module docstring. The scan strategy
         # also shards the pod axis (batch + stale-gradient bank FSDP over
         # ("pod","data")), so the multi-pod dry-run uses it; the pod
         # strategy is exercised on small meshes in tests/test_distributed.py.

@@ -14,6 +14,34 @@ and reports loop-aware totals (per device):
                        (all-reduce 2x, others 1x result bytes)
 
 All values are per-device: post-partitioning HLO shapes are local shapes.
+
+Known SPMD-partitioner CHECK-failure (why ``core.distributed`` refuses
+partial-manual shard_map on jax 0.4.x, and why the multi-pod dry-run uses
+the scan strategy — see launch/dryrun.py):
+
+    F spmd_partitioner_util.cc:504 Check failed:
+      partition_group_list.num_replica_groups() *
+      partition_group_list.num_devices_per_group()
+      == device_groups.num_devices_per_group()
+
+Trigger: a lax.scan (while loop) whose body touches a MODEL-axis-sharded
+array, inside a shard_map that is partial-manual over a "pod" axis, on a
+(2,16,16) host-device mesh (CPU PJRT). The same program compiles fine on
+a (2,2,2) mesh, without the while loop, and with data-axis-only sharding;
+a pure-pjit vmap-over-pods variant crashes identically, so it is not
+specific to shard_map. Minimal program (run with
+``XLA_FLAGS=--xla_force_host_platform_device_count=512``)::
+
+    mesh = jax.make_mesh((2, 16, 16), ("pod", "data", "model"))
+    W = device_put(ones((256, 256)), NamedSharding(mesh, P(None, "model")))
+    x = device_put(ones((64, 256)), NamedSharding(mesh, P(("pod", "data"))))
+    def inner(w, xx):
+        h, _ = jax.lax.scan(lambda h, _: (jnp.tanh(h @ w), None),
+                            xx, None, length=3)
+        return jax.lax.psum(jnp.mean(h), "pod")
+    f = shard_map(inner, mesh=mesh, in_specs=(P(), P("pod")),
+                  out_specs=P(), axis_names={"pod"})
+    jax.jit(f)(W, x)  # aborts in the SPMD partitioner
 """
 from __future__ import annotations
 

@@ -1,21 +1,56 @@
 """Production meshes. Functions, not module constants — importing this module
-never touches jax device state (dryrun.py must set XLA_FLAGS first)."""
+never touches jax device state (dryrun.py must set XLA_FLAGS first).
+
+Audited against the pinned jax (0.4.x, see requirements-dev.txt): the old
+``axis_types=(AxisType.Auto, ...)`` compatibility branch was dead code
+(``jax.sharding.AxisType`` does not exist on 0.4.x, and 0.4.x meshes are
+implicitly Auto), so ``make_auto_mesh`` now calls ``jax.make_mesh``
+directly. Every constructor checks the requested shape against the real
+device count and raises with the fix spelled out — a mesh request that
+cannot be satisfied must never silently degrade to fewer devices.
+"""
 from __future__ import annotations
+
+import math
 
 import jax
 
 
-def make_auto_mesh(shape, axes):
-    """jax.make_mesh with Auto axis types across jax versions.
+def _require_devices(needed: int, what: str) -> None:
+    """Loud failure when a mesh wants more devices than the process has.
 
-    ``axis_types`` (and ``jax.sharding.AxisType``) appeared after 0.4.x;
-    older jax meshes are implicitly Auto, so passing nothing is equivalent.
+    ``jax.make_mesh`` also errors, but with a generic message; this one
+    names the XLA_FLAGS escape hatch used by every multi-device test/bench
+    in this repo (they run in subprocesses — see tests/test_distributed.py).
     """
-    axis_type = getattr(jax.sharding, "AxisType", None)
-    if axis_type is not None:
-        return jax.make_mesh(shape, axes,
-                             axis_types=(axis_type.Auto,) * len(shape))
+    have = jax.device_count()
+    if needed > have:
+        raise ValueError(
+            f"{what} needs {needed} devices but only {have} are visible; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{needed} (in a fresh process, before jax initializes) or "
+            "request a smaller mesh")
+
+
+def make_auto_mesh(shape, axes):
+    """``jax.make_mesh`` with a loud device-count check (axes stay Auto —
+    the 0.4.x default; there is no axis_types argument to pass)."""
+    _require_devices(math.prod(shape), f"mesh {tuple(shape)}x{tuple(axes)}")
     return jax.make_mesh(shape, axes)
+
+
+def make_client_mesh(num_shards: int):
+    """1-D ``("clients",)`` mesh for the sharded federated runtime.
+
+    The client axis of every bank pytree (``launch/sharding.py``
+    ``client_*`` helpers) and the ``repro.fed.mesh`` round programs shard
+    over this mesh. ``num_shards`` must not exceed the visible device
+    count — requesting more errors loudly instead of degrading.
+    """
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    _require_devices(num_shards, f"client mesh ({num_shards} shards)")
+    return jax.make_mesh((num_shards,), ("clients",))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -28,7 +63,11 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_local_mesh(model_parallel: int = 1, *, pods: int = 1):
     """Mesh over whatever devices exist (CPU tests / small runs)."""
     n = jax.device_count()
-    assert n % (model_parallel * pods) == 0, (n, model_parallel, pods)
+    if n % (model_parallel * pods) != 0:
+        raise ValueError(
+            f"device count {n} is not divisible by model_parallel="
+            f"{model_parallel} * pods={pods}; adjust the factors or the "
+            "forced host device count")
     if pods > 1:
         shape = (pods, n // (model_parallel * pods), model_parallel)
         axes = ("pod", "data", "model")

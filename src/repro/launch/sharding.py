@@ -128,3 +128,88 @@ def cache_shardings(cache_shapes: Any, mesh, batch_size: int) -> Any:
 def activation_spec(mesh) -> P:
     """(B, L, D) activations: batch over dp."""
     return P(dp_axes(mesh))
+
+
+# ----------------------------------------------------------- client axis
+# Helpers for the sharded federated runtime (repro.fed.mesh): client banks
+# (momentum ghat, EF residual, censor state, per-client metrics) carry a
+# leading client axis sharded over the 1-D ("clients",) mesh from
+# launch.mesh.make_client_mesh. The round programs run per shard (one jit
+# per device over its contiguous client block); these helpers move data
+# between the per-device views and the global mesh-sharded arrays without
+# any resharding collectives.
+
+def client_shard_sizes(num_clients: int, mesh, axis: str = "clients") -> int:
+    """Per-shard client count, validating divisibility loudly.
+
+    The K-invariance anchor (docs/fed_scaling.md) relies on every shard
+    holding a contiguous, equally-sized client block, so ``num_clients``
+    must divide evenly; a ragged split would silently change which clients
+    share a vmapped program and is refused here.
+    """
+    k = int(mesh.shape[axis])
+    if num_clients % k != 0:
+        raise ValueError(
+            f"num_clients={num_clients} is not divisible by the "
+            f"'{axis}' mesh axis size {k}; pad the population or pick a "
+            "shard count that divides it (see docs/fed_scaling.md)")
+    return num_clients // k
+
+
+def client_spec(ndim: int, axis: str = "clients") -> P:
+    """Leading-axis client sharding for an ``(M, ...)`` bank leaf."""
+    return P(axis, *([None] * (ndim - 1)))
+
+
+def client_shardings(tree: Any, mesh, axis: str = "clients") -> Any:
+    """NamedSharding pytree: leading client axis sharded, rest replicated."""
+    return jax.tree_util.tree_map(
+        lambda x: NamedSharding(mesh, client_spec(x.ndim, axis)), tree)
+
+
+def stack_shards(pieces: list, mesh, axis: str = "clients") -> Any:
+    """Assemble per-shard outputs into one mesh-sharded global pytree.
+
+    ``pieces[i]`` is the pytree produced on ``mesh`` device ``i`` (each
+    leaf a single-device array, every piece the same shapes/dtypes); the
+    result's leaves are global ``(K*local, ...)`` arrays sharded
+    ``P(axis)`` with NO data movement — each piece stays on the device
+    that computed it (the fold collective then runs over the mesh axis).
+    """
+    devices = list(mesh.devices.flat)
+    if len(pieces) != len(devices):
+        raise ValueError(
+            f"stack_shards got {len(pieces)} pieces for a {len(devices)}"
+            f"-device '{axis}' mesh")
+
+    def one(*leaves):
+        shape = (len(devices) * leaves[0].shape[0],) + leaves[0].shape[1:]
+        sharding = NamedSharding(mesh, client_spec(leaves[0].ndim, axis))
+        return jax.make_array_from_single_device_arrays(
+            shape, sharding, [jax.device_put(leaf, dev)
+                              for leaf, dev in zip(leaves, devices)])
+
+    return jax.tree_util.tree_map(one, *pieces)
+
+
+def per_device_views(tree: Any, mesh) -> list:
+    """Split a mesh-sharded (or replicated) pytree into per-device pytrees.
+
+    Inverse of ``stack_shards`` for sharded leaves; for replicated leaves
+    every device yields the full array. ``result[i]`` holds the
+    addressable shard living on mesh device ``i`` — the zero-copy handle
+    the per-shard jitted programs consume.
+    """
+    devices = list(mesh.devices.flat)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    per_leaf = []
+    for leaf in leaves:
+        by_dev = {sh.device: sh.data for sh in leaf.addressable_shards}
+        per_leaf.append([by_dev[d] for d in devices])
+    return [treedef.unflatten([col[i] for col in per_leaf])
+            for i in range(len(devices))]
+
+
+def replicated_sharding(mesh) -> NamedSharding:
+    """Fully-replicated NamedSharding (server state: params, theta_prev)."""
+    return NamedSharding(mesh, P())

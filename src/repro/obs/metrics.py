@@ -31,6 +31,7 @@ Two layers of observables:
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Dict
 
 import jax
@@ -96,6 +97,46 @@ def step_metrics(opt, state, stats) -> MetricBag:
     bag.update(state.comm.metrics())
     bag.update(stage_metrics(opt, state))
     return bag
+
+
+def merge_shard_bags(bags, weights=None) -> MetricBag:
+    """Fold K per-shard MetricBags into one cohort-level bag.
+
+    The sharded fed runtime (``fed.mesh``) collects one bag per mesh
+    shard; this merges them at fold time so consumers see the same single
+    bag every other surface produces. Merge rule per key, by suffix
+    convention:
+
+      * ``*rate`` / ``*mean`` — weighted mean (weights default to
+        uniform; pass per-shard worker counts for exactness under uneven
+        shards);
+      * ``*max`` — max; ``*min`` — min;
+      * everything else (counts, cumulative bytes, sqnorms of per-shard
+        disjoint state) — sum.
+
+    Cross-shard non-additive observables (``agg_grad_sqnorm`` is
+    ``||sum of partials||^2``, not a sum of shard norms) must be
+    overwritten by the caller with the post-fold value — the mesh runtime
+    does exactly that.
+    """
+    bags = list(bags)
+    if not bags:
+        return {}
+    if weights is None:
+        weights = [1.0] * len(bags)
+    total_w = sum(weights)
+    out: MetricBag = {}
+    for key in bags[0]:
+        vals = [b[key] for b in bags]
+        if key.endswith("rate") or key.endswith("mean"):
+            out[key] = sum(w * v for w, v in zip(weights, vals)) / total_w
+        elif key.endswith("max"):
+            out[key] = functools.reduce(jnp.maximum, vals)
+        elif key.endswith("min"):
+            out[key] = functools.reduce(jnp.minimum, vals)
+        else:
+            out[key] = sum(vals)
+    return out
 
 
 def metric_names(opt, params) -> tuple[str, ...]:

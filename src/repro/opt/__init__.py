@@ -20,7 +20,8 @@ still accepts the deprecated ``core.chb.FedOptConfig`` facade. See
 ``docs/opt_api.md`` for the stage anatomy and the add-your-own-algorithm
 tutorial.
 """
-from .api import FedOptimizer, OptState, StepStats, static_pos
+from .api import FedOptimizer, OptState, ShardStepStats, StepStats, \
+    static_pos
 from .censor import (AdaptiveCensor, CensorPolicy, Eq8Censor, NeverCensor,
                      StochasticCensor)
 from .compat import as_optimizer, from_config
@@ -33,7 +34,8 @@ from .transport import (DenseTransport, Int8Transport, LowRankTransport,
                         TopKTransport, Transport)
 
 __all__ = [
-    "FedOptimizer", "OptState", "StepStats", "static_pos",
+    "FedOptimizer", "OptState", "StepStats", "ShardStepStats",
+    "static_pos",
     "CensorPolicy", "NeverCensor", "Eq8Censor", "AdaptiveCensor",
     "StochasticCensor",
     "Transport", "DenseTransport", "Int8Transport", "TopKTransport",

@@ -59,6 +59,23 @@ class StepStats(NamedTuple):
     agg_grad_sqnorm: jax.Array  # () ||grad_k||^2 (paper's NN metric, squared)
 
 
+class ShardStepStats(NamedTuple):
+    """Per-round diagnostics from ``ComposedOptimizer.shard_step``.
+
+    All arrays are shard-local ``(M_local,)`` rows; the sharded fed runtime
+    (``repro.fed.mesh``) reduces them to the scalars its quorum fold ships
+    (arrived counts, loss partials). ``mask`` is the raw censor decision;
+    ``attempted`` adds the participation gate (what actually hit the air —
+    the comm/energy basis); ``delivered`` adds the channel gate (what the
+    bank folded).
+    """
+    mask: jax.Array        # (M_local,) censor pass
+    attempted: jax.Array   # (M_local,) censor AND participate (bytes basis)
+    delivered: jax.Array   # (M_local,) attempted AND channel pass (bank fold)
+    delta_sq: jax.Array    # (M_local,) ||delta_m||^2
+    step_sq: jax.Array     # () ||theta^k - theta^{k-1}||^2
+
+
 @runtime_checkable
 class FedOptimizer(Protocol):
     """The ``repro.opt`` protocol every consumer is written against.

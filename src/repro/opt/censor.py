@@ -61,6 +61,19 @@ class CensorPolicy(Protocol):
         """One worker's decision (bool scalar) for the event runtime."""
         ...
 
+    def decide_ids(self, state, delta_sq: jax.Array, step_sq: jax.Array,
+                   worker_ids: jax.Array) -> tuple[jax.Array, Any]:
+        """``decide`` for a client SHARD carrying absolute worker ids.
+
+        The sharded fed runtime (``repro.fed.mesh``) evaluates each mesh
+        shard's censor decisions locally; ``worker_ids`` are the shard's
+        absolute global client ids, so draw-keyed policies (stochastic)
+        fold the same per-(round, client) keys regardless of how the
+        population is split — the K-invariance anchor. Id-independent
+        policies delegate to ``decide``.
+        """
+        ...
+
     def metrics(self, state) -> dict:
         """Optional ``repro.obs`` hook: stage-local scalar observables.
 
@@ -85,6 +98,9 @@ class NeverCensor:
 
     def client_decide(self, round_index, worker, delta_sq, step_sq):
         return jnp.ones((), jnp.bool_)
+
+    def decide_ids(self, state, delta_sq, step_sq, worker_ids):
+        return self.decide(state, delta_sq, step_sq)
 
     def metrics(self, state) -> dict:
         return {}
@@ -125,6 +141,10 @@ class Eq8Censor:
             return jnp.ones((), jnp.bool_)
         return delta_sq > _eps_cast(self.eps1, step_sq) * step_sq
 
+    def decide_ids(self, state, delta_sq, step_sq, worker_ids):
+        # eq. (8) reads only the norms; the shard's ids are irrelevant
+        return self.decide(state, delta_sq, step_sq)
+
     def metrics(self, state) -> dict:
         # the threshold itself (possibly traced): a swept eps1 shows up in
         # the per-point metric series, making sweep bags self-describing
@@ -162,6 +182,11 @@ class AdaptiveCensor:
         raise NotImplementedError(
             "adaptive censoring needs the whole cohort's deltas; it cannot "
             "run in the event-driven fed runtime")
+
+    def decide_ids(self, ema, delta_sq, step_sq, worker_ids):
+        # the EMA test is elementwise per worker, so a shard holding its
+        # own EMA slice delegates cleanly (ids unused)
+        return self.decide(ema, delta_sq, step_sq)
 
     def metrics(self, ema) -> dict:
         return {"ema_mean": jnp.mean(ema), "ema_max": jnp.max(ema)}
@@ -205,13 +230,18 @@ class StochasticCensor:
 
     def decide(self, k, delta_sq, step_sq):
         workers = jnp.arange(delta_sq.shape[0])
-        u = jax.vmap(lambda i: self._uniform(k, i))(workers)
-        mask = (delta_sq > u * self._tau(k)).astype(jnp.float32)
-        return mask, k + 1
+        return self.decide_ids(k, delta_sq, step_sq, workers)
 
     def client_decide(self, round_index, worker, delta_sq, step_sq):
         u = self._uniform(round_index, worker)
         return delta_sq > u * self._tau(round_index)
+
+    def decide_ids(self, k, delta_sq, step_sq, worker_ids):
+        # folding the shard's ABSOLUTE ids (not a local arange) makes the
+        # draws identical under any split of the population across shards
+        u = jax.vmap(lambda i: self._uniform(k, i))(worker_ids)
+        mask = (delta_sq > u * self._tau(k)).astype(jnp.float32)
+        return mask, k + 1
 
     def metrics(self, k) -> dict:
         # k is the post-step round counter, so tau is the threshold the

@@ -22,12 +22,25 @@ from ..core.util import tree_sqnorm, tree_stack_zeros, tree_sum_leading
 from ..kernels import censor as kernel_censor
 from ..kernels import fused_step as kernel_fused
 from ..kernels import ops as kernel_ops
-from .api import OptState, StepStats, static_pos
+from .api import OptState, ShardStepStats, StepStats, static_pos
 from .censor import CensorPolicy, Eq8Censor, NeverCensor
 from .server import GradientDescent, HeavyBall, ServerUpdate
 from .transport import DenseTransport, Int8Transport, Transport, _bcast
 
 BACKENDS = ("reference", "pallas")
+
+
+def _gate(mask, participate, channel_mask):
+    """Compose the censor mask with the optional round gates.
+
+    All operands are exact {0.0, 1.0} indicators, so the products are
+    logical ANDs that stay exact — and with both gates absent the result
+    IS ``mask``, keeping the ungated shard_step bit-identical to step.
+    """
+    attempted_mask = mask if participate is None else mask * participate
+    delivered_mask = attempted_mask if channel_mask is None \
+        else attempted_mask * channel_mask
+    return attempted_mask, delivered_mask
 
 
 @dataclasses.dataclass(frozen=True)
@@ -375,6 +388,131 @@ class ComposedOptimizer:
             censor=new_censor,
         )
         return new_state, new_params, stats
+
+    def shard_step(self, state: OptState, params, worker_grads, *,
+                   worker_ids=None, participate=None, channel_mask=None
+                   ) -> tuple[OptState, Any, ShardStepStats]:
+        """The client-side half of a step, for ONE mesh shard.
+
+        This is ``step`` with the server update factored out: it runs the
+        censor/transport stages and the bank advance for a shard-local
+        block of workers and returns the shard's eq.-(5) **partial**
+        aggregate ``sum_m ghat_m`` instead of new params. The sharded fed
+        runtime (``repro.fed.mesh``) folds the K partials with a single
+        ``psum`` (``core.distributed.make_client_fold``) and advances
+        theta once via ``apply_server`` — over one shard with no gates,
+        the composed program is bit-identical to ``step`` (the sync
+        anchor; partial + identity-psum + apply is the same HLO as
+        ``step``'s agg + apply).
+
+        Args:
+          state: SHARD-LOCAL state (``(M_local, ...)`` bank rows, the
+            shard's own CommStats; replicated censor state).
+          params / worker_grads: theta^k (replicated) and the shard's
+            ``(M_local, ...)`` stacked gradients.
+          worker_ids: the shard's absolute global client ids — draw-keyed
+            censors fold these so the masks are invariant to how the
+            population is split (omit for a single full-population shard).
+          participate: optional (M_local,) {0,1} gate — who woke up this
+            round. Censor-passing non-participants do NOT transmit.
+          channel_mask: optional (M_local,) {0,1} gate — whose uplink
+            survived the channel. Transmissions that drop still spend
+            bytes/energy (``attempted``) but never reach the bank
+            (``delivered``), matching ``sweep.fed_sweep`` semantics.
+        Returns:
+          ``(new_state, partial_agg, ShardStepStats)``.
+        """
+        if self.granularity != "global":
+            raise NotImplementedError(
+                "shard_step supports global granularity only (per_tensor "
+                "byte accounting is host-side and unsharded)")
+        if self.backend == "pallas":
+            return self._shard_step_pallas(
+                state, params, worker_grads, worker_ids=worker_ids,
+                participate=participate, channel_mask=channel_mask)
+
+        delta = jax.tree_util.tree_map(
+            lambda g, h: g.astype(h.dtype) - h, worker_grads, state.ghat)
+        pending = self.transport.prepare(delta, state.err)
+        dsq = delta_sqnorms(pending)
+        ssq = step_sqnorm(params, state.prev_params)
+        mask, new_censor = self._decide(state.censor, dsq, ssq, worker_ids)
+        attempted_mask, delivered_mask = _gate(mask, participate,
+                                               channel_mask)
+
+        payload, aux = self.transport.encode(pending, state.err)
+        new_err = self.transport.feedback(delivered_mask, pending, payload,
+                                          aux, state.err)
+        new_ghat = jax.tree_util.tree_map(
+            lambda h, q: h + _bcast(delivered_mask, h) * q.astype(h.dtype),
+            state.ghat, payload)
+        partial = tree_sum_leading(new_ghat)
+
+        stats = ShardStepStats(mask=mask, attempted=attempted_mask,
+                               delivered=delivered_mask, delta_sq=dsq,
+                               step_sq=ssq)
+        new_state = OptState(
+            prev_params=params,
+            ghat=new_ghat,
+            err=new_err,
+            comm=state.comm.update(attempted_mask,
+                                   self.transport.payload_bytes(params)),
+            censor=new_censor,
+        )
+        return new_state, partial, stats
+
+    def _shard_step_pallas(self, state: OptState, params, worker_grads, *,
+                           worker_ids=None, participate=None,
+                           channel_mask=None):
+        """Staged-kernel ``shard_step``. The megakernel is out of reach
+        here — it fuses the eq.-(4) update into the sweep, and the server
+        half of a sharded round runs after the cross-shard fold — so this
+        path always takes the staged kernels (sqnorm sweeps, fused
+        encode+EF, fused bank advance), matching ``_step_pallas`` with
+        ``force_staged()`` minus the server apply."""
+        quantized = self.transport.stateful
+        pending = None
+        if quantized:
+            delta = jax.tree_util.tree_map(
+                lambda g, h: g.astype(h.dtype) - h,
+                worker_grads, state.ghat)
+            pending = self.transport.prepare(delta, state.err)
+            dsq = kernel_ops.tree_sqnorms(pending)
+        else:
+            dsq = kernel_ops.tree_delta_sqnorms(worker_grads, state.ghat)
+        ssq = step_sqnorm(params, state.prev_params)
+        mask, new_censor = self._decide(state.censor, dsq, ssq, worker_ids)
+        attempted_mask, delivered_mask = _gate(mask, participate,
+                                               channel_mask)
+
+        if quantized:
+            payload, new_err = self.transport.encode_feedback_pallas(
+                pending, state.err, delivered_mask)
+            new_ghat = kernel_ops.tree_bank_advance(state.ghat, payload,
+                                                    delivered_mask)
+        else:
+            new_err = state.err
+            new_ghat = kernel_ops.tree_censor_bank_advance(
+                worker_grads, state.ghat, delivered_mask)
+        partial = tree_sum_leading(new_ghat)
+
+        stats = ShardStepStats(mask=mask, attempted=attempted_mask,
+                               delivered=delivered_mask, delta_sq=dsq,
+                               step_sq=ssq)
+        new_state = OptState(
+            prev_params=params,
+            ghat=new_ghat,
+            err=new_err,
+            comm=state.comm.update(attempted_mask,
+                                   self.transport.payload_bytes(params)),
+            censor=new_censor,
+        )
+        return new_state, partial, stats
+
+    def _decide(self, censor_state, dsq, ssq, worker_ids):
+        if worker_ids is None:
+            return self.censor.decide(censor_state, dsq, ssq)
+        return self.censor.decide_ids(censor_state, dsq, ssq, worker_ids)
 
     def apply_server(self, params, prev_params, agg):
         """The backend-dispatched server update (``repro.fed`` hook).

@@ -83,7 +83,8 @@ class FedScenarioGrid:
 def run_fed_sweep(cfg, task: FedTask,
                   grid, num_rounds: int, *,
                   energy: Optional[EnergyModel] = None,
-                  vectorize: bool = False) -> "FedSweepResult":
+                  vectorize: bool = False,
+                  mesh=None) -> "FedSweepResult":
     """Sweep deployment scenarios for one algorithm as one device program.
 
     Args:
@@ -100,6 +101,13 @@ def run_fed_sweep(cfg, task: FedTask,
         (defaults to ``fed.EnergyModel()``).
       vectorize: as in ``run_sweep`` — ``False`` (lax.map) keeps the ideal
         point bit-exact vs ``simulator.run``; ``True`` batches for speed.
+      mesh: optional 1-D device mesh (``launch.mesh.make_client_mesh``):
+        the scenario grid is partitioned over its devices — scenarios are
+        embarrassingly parallel, so each shard runs its contiguous block
+        of points with the same per-point program and the results are
+        bit-identical to the unpartitioned sweep at any shard count
+        (tests/test_distributed.py pins this). The grid size must divide
+        the shard count.
     Returns:
       A ``FedSweepResult`` with objective/uplink/bytes/energy trajectories
       per scenario.
@@ -178,10 +186,27 @@ def run_fed_sweep(cfg, task: FedTask,
                jnp.asarray([p.participation for p in points], ftype),
                jnp.asarray([p.quorum for p in points], ftype),
                jnp.asarray([p.seed for p in points], jnp.uint32))
-    if vectorize:
-        program = jax.jit(jax.vmap(one_scenario))
+    inner = jax.vmap(one_scenario) if vectorize else \
+        (lambda xs: jax.lax.map(one_scenario, xs))
+    if mesh is None:
+        program = jax.jit(inner)
     else:
-        program = jax.jit(lambda xs: jax.lax.map(one_scenario, xs))
+        # scenarios are independent, so sharding the grid is a pure
+        # partition: no collectives, each device scans its own block
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as _P
+        from ..core.distributed import _shard_map
+        axis = mesh.axis_names[0]
+        n_shards = mesh.devices.size
+        if len(points) % n_shards:
+            raise ValueError(
+                f"grid has {len(points)} points; a {n_shards}-shard mesh "
+                "needs the point count divisible by the shard count — pad "
+                "the grid or drop mesh=")
+        pts_dev = jax.device_put(pts_dev, NamedSharding(mesh, _P(axis)))
+        program = jax.jit(_shard_map(inner, mesh, in_specs=(_P(axis),),
+                                     out_specs=_P(axis),
+                                     manual_axes={axis}))
     obj, gsq, transmit, delivered, participate, met = \
         jax.tree_util.tree_map(np.asarray, program(pts_dev))
 
@@ -189,8 +214,7 @@ def run_fed_sweep(cfg, task: FedTask,
     payload = payload_bytes_dense(task.init_params)
     attempted = transmit.astype(np.int64).sum(axis=2)        # (B, R)
     cohort = participate.astype(np.int64).sum(axis=2)
-    energy_per_round = (attempted * energy.tx_energy(payload)
-                        + cohort * energy.rx_energy(payload))
+    energy_per_round = energy.round_energy(attempted, cohort, payload)
     return FedSweepResult(
         points=points, num_rounds=num_rounds,
         objective=obj, agg_grad_sqnorm=gsq,

@@ -144,3 +144,165 @@ def test_quantized_scan_strategy_runs():
     """)
     out = run_sub(code)
     assert out["ok"] and out["bytes"] > 0
+
+
+# ===================================================== fed mesh runtime
+FED_COMMON = textwrap.dedent("""
+    import jax, json
+    jax.config.update("jax_enable_x64", True)
+    import numpy as np
+    import repro.opt as ropt
+    from repro.core import simulator
+    from repro.data import paper_tasks
+    from repro.fed.mesh import run_mesh, MeshScenario
+    from repro.launch.mesh import make_client_mesh
+
+    bundle = paper_tasks.make_linear_regression(m=8, n_per=20, d=12, seed=1)
+    task = bundle.task
+    opt = ropt.make("chb", bundle.alpha_paper, num_workers=8)
+""")
+
+
+def test_fed_mesh_shard_count_invariance():
+    """Anchor (b): K in {1, 2, 8} draws the same masks for every client
+    (bit-equal), same counts/quorum decisions, and float trajectories
+    within the K-way fold's reduction-order ulps."""
+    code = FED_COMMON + textwrap.dedent("""
+        sc = MeshScenario(participation=0.7, loss_prob=0.2, quorum=0.5,
+                          seed=3)
+        runs = {K: run_mesh(opt, task, 10, mesh=make_client_mesh(K),
+                            scenario=sc) for K in (1, 2, 8)}
+        base = runs[1]
+        out = {}
+        for K in (2, 8):
+            mh = runs[K]
+            p1 = np.concatenate([np.ravel(x) for x in
+                                 jax.tree_util.tree_leaves(base.final_params)])
+            pk = np.concatenate([np.ravel(x) for x in
+                                 jax.tree_util.tree_leaves(mh.final_params)])
+            out[str(K)] = {
+                "masks_bitwise": bool(np.array_equal(base.mask, mh.mask)),
+                "counts_eq": bool(
+                    np.array_equal(base.participated, mh.participated)
+                    and np.array_equal(base.attempted, mh.attempted)
+                    and np.array_equal(base.delivered, mh.delivered)),
+                "met_eq": bool(np.array_equal(base.quorum_met,
+                                              mh.quorum_met)),
+                "obj_maxrel": float(np.max(np.abs(
+                    base.objective - mh.objective)
+                    / np.abs(base.objective))),
+                "params_maxdiff": float(np.max(np.abs(p1 - pk))),
+            }
+        print(json.dumps(out))
+    """)
+    out = run_sub(code)
+    for k, rec in out.items():
+        assert rec["masks_bitwise"], (k, rec)
+        assert rec["counts_eq"] and rec["met_eq"], (k, rec)
+        assert rec["obj_maxrel"] < 1e-12, (k, rec)
+        assert rec["params_maxdiff"] < 1e-12, (k, rec)
+
+
+def test_fed_mesh_sync_anchor_on_eight_shards():
+    """Anchor (a) survives sharding: the ideal scenario over 8 shards
+    keeps censor masks bit-equal to the single-program simulator, with
+    objective/params drift bounded by the 8-way fold reorder."""
+    code = FED_COMMON + textwrap.dedent("""
+        hist = simulator.run(opt, task, 10)
+        mh = run_mesh(opt, task, 10, mesh=make_client_mesh(8))
+        print(json.dumps({
+            "masks_bitwise": bool(np.array_equal(
+                np.asarray(hist.mask).astype(np.int8), mh.mask)),
+            "comm_eq": bool(np.array_equal(np.asarray(hist.comm_cum),
+                                           mh.comm_cum)),
+            "obj_maxrel": float(np.max(np.abs(
+                np.asarray(hist.objective) - mh.objective)
+                / np.abs(np.asarray(hist.objective)))),
+        }))
+    """)
+    out = run_sub(code)
+    assert out["masks_bitwise"] and out["comm_eq"], out
+    assert out["obj_maxrel"] < 1e-13, out
+
+
+def test_fed_mesh_donation_safe_across_shards():
+    """donate=True at K=2 is bit-identical to donate=False — including
+    the prev_params re-injection after the server's quorum select."""
+    code = FED_COMMON + textwrap.dedent("""
+        sc = MeshScenario(participation=0.8, loss_prob=0.3, quorum=0.6,
+                          seed=5)
+        mesh = make_client_mesh(2)
+        a = run_mesh(opt, task, 12, mesh=mesh, scenario=sc)
+        b = run_mesh(opt, task, 12, mesh=mesh, scenario=sc, donate=True)
+        print(json.dumps({
+            "obj_eq": bool(np.array_equal(a.objective, b.objective)),
+            "mask_eq": bool(np.array_equal(a.mask, b.mask)),
+            "met_eq": bool(np.array_equal(a.quorum_met, b.quorum_met)),
+        }))
+    """)
+    out = run_sub(code)
+    assert all(out.values()), out
+
+
+def test_fed_mesh_indivisible_clients_raise():
+    """M must divide the shard count — loud ValueError, not a silent
+    ragged split."""
+    code = FED_COMMON + textwrap.dedent("""
+        try:
+            run_mesh(opt, task, 2, mesh=make_client_mesh(3))
+            print(json.dumps({"raised": False, "msg": ""}))
+        except ValueError as e:
+            print(json.dumps({"raised": True, "msg": str(e)[:120]}))
+    """)
+    out = run_sub(code)
+    assert out["raised"] and "divis" in out["msg"], out
+
+
+def test_fed_sweep_mesh_partition_is_bitwise():
+    """Scenario-grid partitioning over the mesh is a pure partition:
+    results are bit-identical to the unpartitioned sweep at K in
+    {1, 2, 8}."""
+    code = FED_COMMON + textwrap.dedent("""
+        from repro.sweep.fed_sweep import run_fed_sweep, FedScenarioGrid
+        grid = FedScenarioGrid(loss_prob=(0.0, 0.2),
+                               participation=(1.0, 0.6),
+                               quorum=(1.0, 0.5), seed=(0,))
+        base = run_fed_sweep(opt, task, grid, 6)
+        out = {}
+        for K in (1, 2, 8):
+            r = run_fed_sweep(opt, task, grid, 6, mesh=make_client_mesh(K))
+            out[str(K)] = bool(
+                np.array_equal(base.objective, r.objective)
+                and np.array_equal(base.transmit_mask, r.transmit_mask)
+                and np.array_equal(base.delivered_mask, r.delivered_mask)
+                and np.array_equal(base.energy_cum, r.energy_cum))
+        print(json.dumps(out))
+    """)
+    out = run_sub(code)
+    assert all(out.values()), out
+
+
+def test_hlo_report_ranks_client_fold_collective():
+    """The quorum fold is the mesh runtime's ONE cross-shard collective;
+    obs.hlo_report must surface its all-reduce as the top collective row."""
+    code = textwrap.dedent("""
+        import jax, json
+        import jax.numpy as jnp
+        from repro.core.distributed import make_client_fold
+        from repro.launch.mesh import make_client_mesh
+        from repro.launch.sharding import stack_shards
+        from repro.obs import hlo_report
+
+        mesh = make_client_mesh(8)
+        fold = make_client_fold(mesh)
+        pieces = [jax.device_put(jnp.ones((1, 64), jnp.float32), d)
+                  for d in mesh.devices.flat]
+        stacked = stack_shards([{"g": p} for p in pieces], mesh)
+        text = hlo_report.compiled_text(jax.jit(fold), stacked)
+        rep = hlo_report.report(text, top=5)
+        kinds = [r["kind"] for r in rep["collectives"]]
+        print(json.dumps({"kinds": kinds,
+                          "total": rep["totals"]["collectives"]}))
+    """)
+    out = run_sub(code)
+    assert "all-reduce" in out["kinds"], out

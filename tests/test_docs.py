@@ -36,7 +36,7 @@ def test_markdown_files_exist():
                      "docs/paper_map.md", "docs/sweep_guide.md",
                      "docs/opt_api.md", "docs/kernels.md",
                      "docs/observability.md", "docs/transport_zoo.md",
-                     "docs/lint.md"):
+                     "docs/lint.md", "docs/fed_scaling.md"):
         assert required in names, f"missing {required}"
 
 
@@ -159,6 +159,25 @@ def test_lint_doc_code_executes():
     # the doc's headline objects came out right
     assert ns["artifact"]["counts"]["by_rule"] == {"vmap-in-draw-exact": 1}
     assert ns["fold_rows"].__draw_exact__ is True
+
+
+def test_fed_scaling_doc_code_executes():
+    """Doc-sync: run every ```python block of docs/fed_scaling.md, in
+    order, in one shared namespace — the sync-anchor bitwise claim, the
+    draw-replay claim, the quorum-gate replay, and the exact-bytes
+    accounting are asserted inside the doc itself."""
+    guide = (REPO / "docs" / "fed_scaling.md").read_text()
+    blocks = _CODE_BLOCK_RE.findall(guide)
+    assert len(blocks) >= 5, "fed scaling guide changed: update this test"
+    ns = {"__name__": "fed_scaling_doc"}
+    for i, block in enumerate(blocks):
+        try:
+            exec(compile(block, f"fed_scaling.md[block {i}]", "exec"), ns)
+        except Exception as e:     # pragma: no cover - failure reporting
+            pytest.fail(f"fed_scaling.md code block {i} failed: {e!r}")
+    # the doc's headline objects came out right
+    assert ns["mh"].quorum_met.dtype == bool
+    assert ns["payload"] > 0
 
 
 def test_sweep_guide_code_executes():

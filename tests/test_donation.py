@@ -99,3 +99,23 @@ def test_trainer_donation_flag_is_bit_identical():
         losses[donate] = ([rec["loss"] for rec in hist],
                           int(state.comm.total_uplinks))
     assert losses[True] == losses[False]
+
+
+@pytest.mark.parametrize("quantize", [None, "int8"])
+def test_fed_mesh_donation_is_bit_identical(bundle, quantize):
+    """``run_mesh(donate=True)`` donates each shard's client bank into
+    its round program; like the simulator knob it must be bit-neutral —
+    including the copy guarding the post-quorum prev_params overwrite."""
+    from repro.fed.mesh import MeshScenario, run_mesh
+    o = opt.make("chb", bundle.alpha_paper, M, quantize=quantize)
+    sc = MeshScenario(participation=0.75, loss_prob=0.2, quorum=0.6,
+                      seed=9)
+    plain = run_mesh(o, bundle.task, 12, scenario=sc)
+    donated = run_mesh(o, bundle.task, 12, scenario=sc, donate=True)
+    for f in ("objective", "mask", "quorum_met", "agg_grad_sqnorm",
+              "attempted", "delivered"):
+        np.testing.assert_array_equal(getattr(plain, f), getattr(donated, f),
+                                      err_msg=f)
+    for a, b in zip(jax.tree_util.tree_leaves(plain.final_params),
+                    jax.tree_util.tree_leaves(donated.final_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
